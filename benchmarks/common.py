@@ -1,0 +1,47 @@
+"""Shared benchmark utilities: CSV emission + result persistence."""
+from __future__ import annotations
+
+import csv
+import os
+import time
+from typing import Dict, List
+
+RESULTS_DIR = os.environ.get("REPRO_RESULTS", "results/bench")
+
+
+class Bench:
+    def __init__(self, name: str):
+        self.name = name
+        self.rows: List[Dict] = []
+        self._t0 = time.monotonic()
+
+    def add(self, **row) -> None:
+        self.rows.append(row)
+
+    def emit(self) -> None:
+        """Print name,us_per_call,derived CSV rows + write the full table."""
+        elapsed_us = (time.monotonic() - self._t0) * 1e6
+        per_call = elapsed_us / max(len(self.rows), 1)
+        if self.rows:
+            os.makedirs(RESULTS_DIR, exist_ok=True)
+            path = os.path.join(RESULTS_DIR, f"{self.name}.csv")
+            fields: List[str] = []
+            for row in self.rows:  # union, order-preserving (mixed panels)
+                for k in row:
+                    if k not in fields:
+                        fields.append(k)
+            with open(path, "w", newline="") as f:
+                w = csv.DictWriter(f, fieldnames=fields, restval="")
+                w.writeheader()
+                w.writerows(self.rows)
+        derived = self.derived()
+        print(f"{self.name},{per_call:.1f},{derived}")
+
+    def derived(self) -> str:
+        return f"rows={len(self.rows)}"
+
+
+def fmt(x) -> str:
+    if isinstance(x, float):
+        return f"{x:.4g}"
+    return str(x)

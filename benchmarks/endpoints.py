@@ -1,0 +1,36 @@
+"""Beyond-paper: the MQFQ-Sticky control plane serving the ten ASSIGNED
+architectures as endpoints (service times from the roofline cost model,
+weight residency in HBM). The paper's Table-1 functions become model
+endpoints; the same fairness/locality story must hold."""
+from __future__ import annotations
+
+from benchmarks.common import Bench
+from repro.core.policies import make_policy
+from repro.memory.manager import GB
+from repro.runtime.simulate import run_sim
+from repro.workloads.costmodel import endpoint_mix
+from repro.workloads.traces import zipf_trace
+
+
+def main() -> Bench:
+    b = Bench("endpoints")
+    for shape in ["decode_32k", "prefill_32k"]:
+        fns = endpoint_mix(shape)
+        mean_svc = sum(s.warm_time for s in fns.values()) / len(fns)
+        rps = 0.7 * 2 / mean_svc  # ~70% offered load at D=2
+        duration = 400.0 / rps    # ~400 events regardless of service scale
+        trace = zipf_trace(fns, duration=duration, total_rps=rps, seed=3)
+        for pname in ["fcfs", "sjf", "mqfq-sticky"]:
+            res = run_sim(make_policy(pname), fns, trace, d=2,
+                          capacity_bytes=128 * GB, h2d_bw=100 * GB,
+                          pool_size=8)
+            b.add(shape=shape, policy=pname,
+                  mean_latency_s=round(res.mean_latency(), 2),
+                  p99_latency_s=round(res.p99_latency(), 2),
+                  cold_pct=round(res.pool.cold_hit_pct, 1))
+    b.emit()
+    return b
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,37 @@
+"""Paper Fig. 3: interposition overhead. The paper's LD_PRELOAD shim adds
+<= single-digit % to function execution; our analogue is the residency
+manager's per-dispatch accounting. We measure the actual control-plane
+cost per acquire/release cycle in microseconds and relate it to the
+function service times (all >= 26 ms in Table 1)."""
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import Bench
+from repro.memory.manager import GB, DeviceMemoryManager
+from repro.workloads.spec import PAPER_FUNCTIONS
+
+
+def main() -> Bench:
+    b = Bench("fig3_shim")
+    mgr = DeviceMemoryManager(64 * GB, policy="prefetch_swap")
+    n = 20_000
+    t0 = time.perf_counter()
+    for i in range(n):
+        fid = f"f{i % 32}"
+        mgr.on_queue_active(fid, GB, float(i))
+        mgr.acquire(fid, GB, float(i))
+        if i % 3 == 0:
+            mgr.on_queue_idle(fid, float(i))
+    per_call_us = (time.perf_counter() - t0) / n * 1e6
+    for fn_id, spec in PAPER_FUNCTIONS.items():
+        b.add(function=fn_id, warm_time_s=spec.warm_time,
+              shim_us_per_dispatch=round(per_call_us, 2),
+              overhead_pct=round(100 * per_call_us * 1e-6
+                                 / spec.warm_time, 4))
+    b.emit()
+    return b
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,86 @@
+"""Paper Fig. 5: (a) service-time fairness as functions join, (b) max
+service gap vs the Eq. 1 theoretical bound, (c) end-to-end latency vs
+offered load (FCFS vs MQFQ-Sticky), Zipfian workload class."""
+from __future__ import annotations
+
+from benchmarks.common import Bench
+from repro.core.policies import make_policy
+from repro.memory.manager import GB
+from repro.runtime.simulate import run_sim
+from repro.workloads.spec import DEFAULT_MIX, PAPER_FUNCTIONS, \
+    function_copies
+from repro.workloads.traces import TraceEvent, zipf_trace
+
+
+def fig5a(b: Bench) -> None:
+    """Two 'High' + two 'Low' copies of cupy; the high-rate pair joins at
+    t=300s. Under FCFS popular functions dominate; MQFQ equalizes."""
+    base = PAPER_FUNCTIONS["cupy"]
+    fns = {f"cupy-{i}": base.with_id(f"cupy-{i}") for i in range(4)}
+    trace = []
+    for i in (0, 1):     # low rate, always on: IAT 2s
+        t = 0.05 * i
+        while t < 600:
+            trace.append(TraceEvent(t, f"cupy-{i}"))
+            t += 2.0
+    for i in (2, 3):     # high rate, joins at 300s: IAT 1s
+        t = 300.0 + 0.05 * i
+        while t < 600:
+            trace.append(TraceEvent(t, f"cupy-{i}"))
+            t += 1.0
+    trace.sort(key=lambda e: e.time)
+    for pname in ["fcfs", "mqfq-sticky"]:
+        res = run_sim(make_policy(pname), fns, trace, d=1)
+        for (t0, t1) in [(200, 230), (400, 430), (500, 530)]:
+            svc = res.service_time_by_fn(t0, t1)
+            low = sum(svc.get(f"cupy-{i}", 0.0) for i in (0, 1)) / 2
+            high = sum(svc.get(f"cupy-{i}", 0.0) for i in (2, 3)) / 2
+            b.add(panel="5a", policy=pname, window=f"{t0}-{t1}",
+                  low_rate_service_s=round(low, 2),
+                  high_rate_service_s=round(high, 2),
+                  ratio=round(high / max(low, 1e-9), 2))
+
+
+def fig5b(b: Bench) -> None:
+    fns = function_copies(DEFAULT_MIX, 24)
+    trace = zipf_trace(fns, duration=600.0, total_rps=1.6, seed=1)
+    pol = make_policy("mqfq-sticky", T=10.0)
+    res = run_sim(pol, fns, trace, d=2, h2d_bw=12 * GB)
+    gaps = [w.max_gap for w in res.fairness.windows]
+    bounds = [w.bound for w in res.fairness.windows]
+    if gaps:
+        b.add(panel="5b", policy="mqfq-sticky",
+              mean_gap_s=round(sum(gaps) / len(gaps), 2),
+              max_gap_s=round(max(gaps), 2),
+              mean_bound_s=round(sum(bounds) / len(bounds), 2),
+              windows=len(gaps),
+              within_bound=all(g <= bd + 2 * 10.0 + 10.0
+                               for g, bd in zip(gaps, bounds)))
+
+
+def fig5c(b: Bench) -> None:
+    fns = function_copies(DEFAULT_MIX, 24)
+    for rps in [0.4, 0.8, 1.2, 1.6, 2.0]:
+        trace = zipf_trace(fns, duration=400.0, total_rps=rps, seed=2)
+        lat = {}
+        for pname in ["fcfs", "mqfq-sticky"]:
+            res = run_sim(make_policy(pname), fns, trace, d=2,
+                          pool_size=16, h2d_bw=12 * GB)
+            lat[pname] = res.mean_latency()
+        b.add(panel="5c", rps=rps,
+              fcfs_latency_s=round(lat["fcfs"], 2),
+              mqfq_latency_s=round(lat["mqfq-sticky"], 2),
+              speedup=round(lat["fcfs"] / max(lat["mqfq-sticky"], 1e-9), 2))
+
+
+def main() -> Bench:
+    b = Bench("fig5_fairness")
+    fig5a(b)
+    fig5b(b)
+    fig5c(b)
+    b.emit()
+    return b
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,50 @@
+"""Paper Fig. 6: queueing-policy comparison on the medium-intensity Azure
+trace across device-parallelism levels D (latency, per-function variance,
+cold %, utilization). Includes the FCFS-Naive (no container pool / no
+memory management) baseline whose latency collapses."""
+from __future__ import annotations
+
+import statistics
+
+from benchmarks.common import Bench
+from repro.core.policies import make_policy
+from repro.memory.manager import GB
+from repro.runtime.simulate import run_sim
+from repro.workloads.traces import make_workload
+
+
+def main() -> Bench:
+    b = Bench("fig6_policies")
+    fns, trace = make_workload("azure", n_fns=19, duration=600.0,
+                               trace_id=4)
+    for d in (1, 2, 3):
+        for pname in ["fcfs", "batch", "sjf", "eevdf", "mqfq",
+                      "mqfq-sticky"]:
+            res = run_sim(make_policy(pname), fns, trace, d=d,
+                          pool_size=32, h2d_bw=12 * GB)
+            per_fn = list(res.per_fn_mean().values())
+            intra = res.intra_fn_variance()
+            b.add(panel="6a", D=d, policy=pname,
+                  mean_latency_s=round(res.mean_latency(), 2),
+                  p99_latency_s=round(res.p99_latency(), 2),
+                  inter_fn_var=round(statistics.pvariance(per_fn), 1)
+                  if len(per_fn) > 1 else 0.0,
+                  mean_intra_fn_var=round(
+                      statistics.fmean(intra.values()), 1),
+                  cold_pct=round(res.pool.cold_hit_pct, 1),
+                  utilization=round(res.mean_utilization(), 3))
+    # FCFS-Naive: no warm pool (size 0 -> every start cold), no prefetch
+    res = run_sim(make_policy("fcfs"), fns, trace, d=2, pool_size=1,
+                  mem_policy="ondemand", h2d_bw=12 * GB)
+    b.add(panel="6a", D=2, policy="fcfs-naive",
+          mean_latency_s=round(res.mean_latency(), 2),
+          p99_latency_s=round(res.p99_latency(), 2),
+          inter_fn_var=0.0, mean_intra_fn_var=0.0,
+          cold_pct=round(res.pool.cold_hit_pct, 1),
+          utilization=round(res.mean_utilization(), 3))
+    b.emit()
+    return b
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,50 @@
+"""Paper Fig. 7c: multi-device scaling with sticky late binding — a
+second device cuts latency super-linearly at high load (more D tokens +
+on-the-fly load balancing). Also the MIG-analogue (Fig. 7a/7b): two half
+slices inflate per-invocation service time for large functions."""
+from __future__ import annotations
+
+import dataclasses
+
+from benchmarks.common import Bench
+from repro.core.policies import make_policy
+from repro.runtime.simulate import run_sim
+from repro.workloads.traces import make_workload
+
+
+def main() -> Bench:
+    b = Bench("fig7_multidevice")
+    fns, trace = make_workload("azure", n_fns=19, duration=600.0,
+                               trace_id=6)  # high-load trace
+    for n_dev in (1, 2):
+        for d in (1, 2, 3):
+            res = run_sim(make_policy("mqfq-sticky"), fns, trace,
+                          n_devices=n_dev, d=d)
+            b.add(panel="7c", devices=n_dev, D=d,
+                  mean_latency_s=round(res.mean_latency(), 2),
+                  p99_latency_s=round(res.p99_latency(), 2),
+                  cold_pct=round(res.pool.cold_hit_pct, 1))
+
+    # MIG-analogue: two half-size slices -> large functions run ~1.7x
+    # slower on a slice (paper Fig. 7b: RNN/SRAD/FFT slow down; unmodified
+    # functions don't account for the smaller slice)
+    slow = {fid: dataclasses.replace(s, warm_time=s.warm_time * 1.7)
+            for fid, s in fns.items()}
+    full = run_sim(make_policy("mqfq-sticky"), fns, trace, n_devices=1,
+                   d=2)
+    mig = run_sim(make_policy("mqfq-sticky"), slow, trace, n_devices=2,
+                  d=1)
+    b.add(panel="7a", devices="1 full GPU", D=2,
+          mean_latency_s=round(full.mean_latency(), 2),
+          p99_latency_s=round(full.p99_latency(), 2),
+          cold_pct=round(full.pool.cold_hit_pct, 1))
+    b.add(panel="7a", devices="2 MIG slices", D="1/slice",
+          mean_latency_s=round(mig.mean_latency(), 2),
+          p99_latency_s=round(mig.p99_latency(), 2),
+          cold_pct=round(mig.pool.cold_hit_pct, 1))
+    b.emit()
+    return b
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,53 @@
+"""Roofline report (deliverable g): reads the dry-run artifacts and emits
+the per-(arch x shape x mesh) three-term roofline table used by
+EXPERIMENTS.md §Roofline."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import Bench
+from repro.analysis.flops import HBM_BW, ICI_BW, PEAK_FLOPS
+
+DRYRUN_DIR = os.environ.get("REPRO_DRYRUN", "results/dryrun")
+
+
+def load_records(mesh: str = "pod_16x16"):
+    recs = []
+    for path in sorted(glob.glob(os.path.join(DRYRUN_DIR, f"{mesh}__*.json"))):
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def main() -> Bench:
+    b = Bench("roofline")
+    recs = load_records("pod_16x16")
+    if not recs:
+        print("roofline,0,no dry-run artifacts (run repro.launch.dryrun)")
+        return b
+    for r in recs:
+        chips = r["chips"]
+        a = r["analytic"]
+        hbm = a["weight_bytes"] + a["kv_bytes"] + a["act_bytes"]
+        compute_s = a["flops"] / (chips * PEAK_FLOPS)
+        memory_s = hbm / (chips * HBM_BW)
+        coll_s = r["collectives"]["total_bytes"] / (chips * ICI_BW)
+        dom = max((("compute", compute_s), ("memory", memory_s),
+                   ("collective", coll_s)), key=lambda kv: kv[1])[0]
+        useful = a["model_flops_6nd"] / max(a["flops"], 1.0)
+        hlo_flops_dev = r["hlo_cost"]["flops_per_device"]
+        b.add(arch=r["arch"], shape=r["shape"], chips=chips,
+              compute_s=f"{compute_s:.3e}", memory_s=f"{memory_s:.3e}",
+              collective_s=f"{coll_s:.3e}", dominant=dom,
+              model_over_hlo=round(useful, 3),
+              hlo_flops_per_dev=f"{hlo_flops_dev:.3e}",
+              peak_gb_per_dev=r["memory"]["peak_per_device_gb"],
+              fits_16gb=r["memory"]["peak_per_device_gb"] <= 16.0)
+    b.emit()
+    return b
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,44 @@
+"""Benchmark runner: one function per paper table/figure.
+Prints ``name,us_per_call,derived`` CSV; full tables land in
+results/bench/*.csv.
+
+    PYTHONPATH=src python -m benchmarks.run [--only fig6]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+MODULES = [
+    "table1_latency",   # Table 1
+    "fig3_shim",        # Fig 3
+    "fig4_memory",      # Fig 4
+    "fig5_fairness",    # Fig 5a/5b/5c
+    "fig6_policies",    # Fig 6a/6b/6c
+    "fig7_multidevice", # Fig 7a/7c
+    "fig8_sensitivity", # Fig 8a/8b/8c + sticky ablation
+    "endpoints",        # beyond paper: assigned archs as endpoints
+    "roofline",         # deliverable (g) report
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="")
+    args = ap.parse_args()
+    mods = [m for m in MODULES if args.only in m] if args.only else MODULES
+    print("name,us_per_call,derived")
+    failures = []
+    for name in mods:
+        mod = __import__(f"benchmarks.{name}", fromlist=["main"])
+        try:
+            mod.main()
+        except Exception as e:  # noqa: BLE001
+            failures.append((name, repr(e)))
+            print(f"{name},FAILED,{e!r}", file=sys.stderr)
+    if failures:
+        raise SystemExit(f"benchmark failures: {failures}")
+
+
+if __name__ == "__main__":
+    main()

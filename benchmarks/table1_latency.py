@@ -1,0 +1,36 @@
+"""Paper Table 1: warm vs cold invocation latency per function (GPU + CPU
+columns), reproduced through the simulator's start-type machinery."""
+from __future__ import annotations
+
+from benchmarks.common import Bench
+from repro.core.policies import make_policy
+from repro.memory.manager import GB
+from repro.runtime.simulate import run_sim
+from repro.workloads.spec import PAPER_FUNCTIONS
+from repro.workloads.traces import TraceEvent
+
+
+def main() -> Bench:
+    b = Bench("table1_latency")
+    for fn_id, spec in PAPER_FUNCTIONS.items():
+        fns = {fn_id: spec}
+        # two invocations, far apart: first is cold, second warm
+        trace = [TraceEvent(0.0, fn_id), TraceEvent(100.0, fn_id)]
+        res = run_sim(make_policy("mqfq-sticky", alpha=1000.0), fns, trace,
+                      d=1, h2d_bw=12 * GB)
+        cold, warm = res.invocations
+        b.add(function=fn_id,
+              gpu_warm_s=round(warm.latency, 3),
+              gpu_cold_s=round(cold.latency, 3),
+              cpu_warm_s=spec.cpu_warm,
+              cpu_cold_s=spec.cpu_cold,
+              cold_over_warm=round(cold.latency / max(warm.latency, 1e-9),
+                                   1),
+              gpu_speedup_vs_cpu=round(spec.cpu_warm
+                                       / max(warm.latency, 1e-9), 1))
+    b.emit()
+    return b
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,159 @@
+"""Post-SPMD HLO parsing: per-collective byte accounting.
+
+``collective_bytes(compiled_text, scan_trips)`` sums operand bytes of
+every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute in the optimized (post-partitioning) HLO. XLA's cost
+analysis counts a while (scan) body ONCE, so ops inside computations
+reachable from a while body are multiplied by the loop trip count
+(= stacked layer count, passed by the caller).
+
+Byte convention (wire traffic per device, ring algorithms):
+  all-reduce:          2x operand bytes x (n-1)/n  ~ 2x operand
+  all-gather:          result bytes x (n-1)/n      ~ result
+  reduce-scatter:      operand bytes x (n-1)/n     ~ operand
+  all-to-all:          operand bytes x (n-1)/n     ~ operand
+  collective-permute:  operand bytes
+We report the un-discounted tensor bytes (n-1)/n ~= 1 — consistent,
+slightly conservative.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+from typing import Dict, List, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?(%[\w.\-]+)\s*=\s*(\([^)]*\)|\S+)\s+([\w\-]+)")
+# computation header: "%name (args...) -> result_type {" — args may nest
+# parens (tuple types), so match greedily up to the trailing "... -> ... {"
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?(%?[\w.\-]+)\s+\(.*\)\s*->\s*\S.*\{\s*$")
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+
+def shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclass
+class CollectiveStats:
+    counts: Dict[str, int] = field(default_factory=lambda: defaultdict(int))
+    bytes_by_kind: Dict[str, float] = field(
+        default_factory=lambda: defaultdict(float))
+
+    @property
+    def total_bytes(self) -> float:
+        return sum(self.bytes_by_kind.values())
+
+
+def _split_computations(text: str) -> Dict[str, List[str]]:
+    comps: Dict[str, List[str]] = {}
+    cur = None
+    for line in text.splitlines():
+        m = _COMP_RE.match(line)
+        if m and "{" in line:
+            cur = m.group(1).lstrip("%")
+            comps[cur] = []
+        elif line.startswith("ENTRY"):
+            cur = "ENTRY"
+            comps[cur] = []
+        if cur is not None:
+            comps[cur].append(line)
+    return comps
+
+
+def collective_bytes(hlo_text: str, scan_trips: Dict[str, int] | int = 1
+                     ) -> CollectiveStats:
+    """Parse optimized HLO; multiply collectives inside while-body
+    computations by the trip count. ``scan_trips`` is either a single int
+    (applied to every while) or a map {body_name_substring: trips}."""
+    comps = _split_computations(hlo_text)
+
+    # shape of every defined op (for operand lookup)
+    def_shape: Dict[str, str] = {}
+    for lines in comps.values():
+        for line in lines:
+            m = _DEF_RE.match(line)
+            if m:
+                def_shape[m.group(1)] = m.group(2)
+
+    # while bodies: find `while(` ops, extract body=%name
+    body_re = re.compile(r"body=(%?[\w.\-]+)")
+    while_bodies: List[str] = []
+    for lines in comps.values():
+        for line in lines:
+            if re.search(r"\bwhile\(", line):
+                m = body_re.search(line)
+                if m:
+                    while_bodies.append(m.group(1).lstrip("%"))
+
+    # computations reachable from a while body (calls/fusions)
+    def reachable(root: str, seen=None) -> set:
+        seen = seen or set()
+        if root in seen or root not in comps:
+            return seen
+        seen.add(root)
+        text = "\n".join(comps[root])
+        for name in comps:
+            if name in seen or name == "ENTRY":
+                continue
+            if re.search(r"%?" + re.escape(name) + r"\b", text):
+                reachable(name, seen)
+        return seen
+
+    in_loop: Dict[str, int] = {}
+    for body in while_bodies:
+        if isinstance(scan_trips, dict):
+            trips = 1
+            for sub, t in scan_trips.items():
+                if sub in body:
+                    trips = t
+                    break
+        else:
+            trips = scan_trips
+        for name in reachable(body):
+            in_loop[name] = max(in_loop.get(name, 1), trips)
+
+    stats = CollectiveStats()
+    coll_re = re.compile(
+        r"(%[\w.\-]+)\s*=\s*(\([^)]*\)|\S+)\s+"
+        r"(all-reduce|all-gather|reduce-scatter|all-to-all|"
+        r"collective-permute)(?:-start)?\(([^)]*)\)")
+    for comp_name, lines in comps.items():
+        mult = in_loop.get(comp_name, 1)
+        for line in lines:
+            m = coll_re.search(line)
+            if m:
+                _, result_type, kind, operands = m.groups()
+                if kind == "all-gather":
+                    nbytes = shape_bytes(result_type)
+                else:
+                    nbytes = 0
+                    for op in operands.split(","):
+                        op = op.strip().split(" ")[-1]
+                        if op in def_shape:
+                            nbytes += shape_bytes(def_shape[op])
+                    if nbytes == 0:  # operand not found: use result
+                        nbytes = shape_bytes(result_type)
+                if kind == "all-reduce":
+                    nbytes *= 2  # ring all-reduce moves ~2x
+                stats.counts[kind] += mult
+                stats.bytes_by_kind[kind] += float(nbytes) * mult
+    return stats

@@ -1,0 +1,6 @@
+from repro.core.flow import FlowQueue, QueueState
+from repro.core.mqfq import MQFQ, MQFQSticky
+from repro.core.policies import FCFS, SJF, Batch, EEVDF, make_policy
+from repro.core.policy_base import Policy
+from repro.core.tokens import ConcurrencyController
+from repro.core.fairness import FairnessTracker

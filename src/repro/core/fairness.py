@@ -1,0 +1,67 @@
+"""Service-time fairness accounting and the Eq. 1 bound (paper §4.2).
+
+For backlogged flows i, j over an interval:
+    | S_i/w_i - S_j/w_j | <= (D - 1) (2T + tau_i/w_i - tau_j/w_j)
+
+``FairnessTracker`` accumulates per-flow device service time in fixed
+windows (30 s in the paper's Fig. 5) restricted to flows backlogged for
+the whole window, and evaluates the observed max gap vs the bound.
+"""
+from __future__ import annotations
+
+from collections import defaultdict
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+
+@dataclass
+class WindowRecord:
+    t0: float
+    t1: float
+    service: Dict[str, float]
+    backlogged: Dict[str, bool]
+    max_gap: float
+    bound: float
+
+
+class FairnessTracker:
+    def __init__(self, window: float = 30.0, T: float = 10.0, D: int = 2):
+        self.window = window
+        self.T = T
+        self.D = D
+        self._t0 = 0.0
+        self._service: Dict[str, float] = defaultdict(float)
+        self._tau: Dict[str, float] = {}
+        self._always_backlogged: Dict[str, bool] = {}
+        self.windows: List[WindowRecord] = []
+
+    def observe_backlog(self, fn_id: str, backlogged: bool) -> None:
+        """Call at arrivals/completions: a flow counts for the bound only
+        if it stayed backlogged through the whole window."""
+        if fn_id not in self._always_backlogged:
+            self._always_backlogged[fn_id] = backlogged
+        else:
+            self._always_backlogged[fn_id] &= backlogged
+
+    def add_service(self, fn_id: str, amount: float, tau: float,
+                    weight: float = 1.0) -> None:
+        self._service[fn_id] += amount / weight
+        self._tau[fn_id] = tau / weight
+
+    def maybe_roll(self, now: float) -> Optional[WindowRecord]:
+        if now - self._t0 < self.window:
+            return None
+        flows = [f for f, ok in self._always_backlogged.items() if ok]
+        rec = None
+        if len(flows) >= 2:
+            s = [self._service[f] for f in flows]
+            taus = [self._tau.get(f, 0.0) for f in flows]
+            max_gap = max(s) - min(s)
+            bound = (self.D - 1) * (2 * self.T + max(taus) - min(taus))
+            rec = WindowRecord(self._t0, now, dict(self._service),
+                               {f: True for f in flows}, max_gap, bound)
+            self.windows.append(rec)
+        self._t0 = now
+        self._service.clear()
+        self._always_backlogged.clear()
+        return rec

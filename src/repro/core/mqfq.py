@@ -1,0 +1,120 @@
+"""MQFQ-Sticky (paper Algorithm 1) and plain MQFQ.
+
+Differences from classic SFQ/MQFQ, per the paper:
+  - queues may dispatch while VT <= Global_VT + T (queue over-run ->
+    batching; non-strict so T=0 degrades to classic SFQ, not starvation)
+  - empty queues stay Active for TTL = alpha * IAT (anticipatory scheduling)
+  - preferential dispatch: longest queue first; with D > 1, tie-break on
+    fewest in-flight ("sticky" locality + anti-self-collision)
+
+Note on the paper's Alg. 1 line 22 / §4.2 text: both state the throttle
+comparison with the inequality reversed ("queue.VT + T >= Global_VT");
+the consistent reading (used by the fairness proof, Eq. 1) is the strict
+*eligible iff VT < Global_VT + T*. To keep T=0 work-conserving (classic
+SFQ, not starvation) the queue sitting at the Global_VT floor is always
+eligible: eligible iff (VT < G+T) or (VT <= G); throttled otherwise.
+"""
+from __future__ import annotations
+
+import random
+from typing import Dict, List, Optional
+
+from repro.core.flow import FlowQueue, QueueState
+from repro.core.policy_base import Policy
+from repro.runtime.invocation import Invocation
+
+
+class MQFQSticky(Policy):
+    name = "mqfq-sticky"
+
+    def __init__(self, T: float = 10.0, alpha: float = 2.0,
+                 sticky: bool = True, vt_by_service: bool = True,
+                 deficit_vt: bool = False, seed: int = 0):
+        super().__init__()
+        self.T = T
+        self.alpha = alpha
+        self.sticky = sticky
+        self.vt_by_service = vt_by_service  # False -> Fig 8a "1.0" ablation
+        self.deficit_vt = deficit_vt        # beyond-paper VT settle
+        self.global_vt = 0.0
+        self._rng = random.Random(seed)
+        self.state_listeners = []
+
+    # -- helpers ------------------------------------------------------------
+    def _refresh_global_vt(self) -> None:
+        vts = [q.vt for q in self.queues.values() if q.backlogged]
+        if vts:
+            self.global_vt = max(self.global_vt, min(vts))
+
+    def _throttled(self, q: FlowQueue) -> bool:
+        """Complement of Eq. 1's eligibility VT < Global_VT + T, except the
+        queue at the Global_VT floor is always eligible (work conservation,
+        T=0 == classic SFQ)."""
+        return q.vt >= self.global_vt + self.T and q.vt > self.global_vt
+
+    def _update_state(self, q: FlowQueue, now: float) -> None:
+        old = q.state
+        if not q.pending and q.in_flight == 0:
+            if q.state is not QueueState.INACTIVE \
+                    and now - q.last_exec >= q.ttl(self.alpha):
+                q.state = QueueState.INACTIVE   # queue expired
+            elif q.state is QueueState.INACTIVE:
+                pass
+            elif self._throttled(q):
+                q.state = QueueState.THROTTLED
+            else:
+                q.state = QueueState.ACTIVE
+        elif self._throttled(q):
+            q.state = QueueState.THROTTLED
+        else:
+            q.state = QueueState.ACTIVE
+        if old is not q.state:
+            for cb in self.state_listeners:
+                cb(q, old, q.state, now)
+
+    # -- Policy interface -----------------------------------------------------
+    def on_arrival(self, inv: Invocation, now: float) -> None:
+        q = self.get_queue(inv.fn_id)
+        q.arrive(inv, now, self.global_vt)
+        self._update_state(q, now)
+
+    def choose(self, now: float) -> Optional[FlowQueue]:
+        """Algorithm 1 DISPATCH (without the D-token, which the engine
+        holds): returns the chosen queue or None."""
+        self._refresh_global_vt()
+        for q in self.queues.values():
+            self._update_state(q, now)
+        cand = [q for q in self.queues.values()
+                if q.state is QueueState.ACTIVE and len(q) > 0
+                and not self._throttled(q)]
+        if not cand:
+            return None
+        if self.sticky:
+            cand.sort(key=lambda q: -len(q))           # longest queue first
+            if self.device_parallelism != 1:
+                cand.sort(key=lambda q: q.in_flight)   # stable: fewest in-flight
+            return cand[0]
+        # plain MQFQ: an arbitrary queue meeting the criteria
+        return self._rng.choice(cand)
+
+    def on_dispatch(self, q: FlowQueue, inv: Invocation, now: float) -> None:
+        if self.vt_by_service:
+            q.on_dispatch(inv, now)
+        else:  # ablation: ignore heterogeneity, unit VT increment
+            tau, q.tau = q.tau, 1.0
+            q.on_dispatch(inv, now)
+            q.tau = tau
+        self._refresh_global_vt()
+        self._update_state(q, now)
+
+    def on_complete(self, q: FlowQueue, inv: Invocation, now: float) -> None:
+        q.on_complete(inv, now, inv.service_time)
+        self._update_state(q, now)
+
+
+class MQFQ(MQFQSticky):
+    """Original MQFQ: arbitrary candidate choice (no sticky heuristic)."""
+    name = "mqfq"
+
+    def __init__(self, T: float = 10.0, alpha: float = 2.0, seed: int = 0):
+        super().__init__(T=T, alpha=alpha, sticky=False, seed=seed)

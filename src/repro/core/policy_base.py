@@ -1,0 +1,50 @@
+"""Queueing-policy interface shared by MQFQ-Sticky and the baselines.
+
+The engine drives: on_arrival -> choose()/on_dispatch -> on_complete.
+``device_parallelism`` mirrors the engine's current dynamic D so policies
+(like MQFQ-Sticky's tie-break) can condition on it.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional
+
+from repro.core.flow import FlowQueue, QueueState
+from repro.runtime.invocation import Invocation
+
+
+class Policy:
+    name = "base"
+
+    def __init__(self):
+        self.queues: Dict[str, FlowQueue] = {}
+        self.device_parallelism = 1
+        self.state_listeners: List = []
+        self.deficit_vt = False   # beyond-paper: measured-service VT settle
+
+    def get_queue(self, fn_id: str) -> FlowQueue:
+        q = self.queues.get(fn_id)
+        if q is None:
+            q = FlowQueue(fn_id=fn_id, deficit_vt=self.deficit_vt)
+            self.queues[fn_id] = q
+        return q
+
+    # -- to implement -----------------------------------------------------
+    def on_arrival(self, inv: Invocation, now: float) -> None:
+        raise NotImplementedError
+
+    def choose(self, now: float) -> Optional[FlowQueue]:
+        raise NotImplementedError
+
+    def on_dispatch(self, q: FlowQueue, inv: Invocation, now: float) -> None:
+        q.on_dispatch(inv, now)
+
+    def on_complete(self, q: FlowQueue, inv: Invocation, now: float) -> None:
+        q.on_complete(inv, now, inv.service_time)
+
+    # -- shared accounting ---------------------------------------------------
+    @property
+    def total_pending(self) -> int:
+        return sum(len(q) for q in self.queues.values())
+
+    def backlogged_queues(self) -> List[FlowQueue]:
+        return [q for q in self.queues.values() if q.backlogged]

@@ -1,0 +1,28 @@
+"""Pure-jnp oracle for decode attention (mirrors models.attention)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def decode_attention_ref(q, k, v, pos, slot_pos, *, window: int = 0):
+    """q: (BH, G, dh); k/v: (BH, S, dh); slot_pos: (S,)."""
+    dh = q.shape[-1]
+    s = jnp.einsum("bgd,bsd->bgs", q, k,
+                   preferred_element_type=jnp.float32) * dh ** -0.5
+    valid = (slot_pos >= 0) & (slot_pos <= pos)
+    if window:
+        valid &= slot_pos > pos - window
+    s = jnp.where(valid[None, None, :], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bgs,bsd->bgd", w.astype(v.dtype), v).astype(q.dtype)
+
+
+def decode_attention_q8_ref(q, k, k_scale, v, v_scale, pos, slot_pos, *,
+                            window: int = 0):
+    """Oracle for the int8-cache kernel: dequantize, then bf16 reference."""
+    kf = (k.astype(jnp.float32) * k_scale[..., None]).astype(q.dtype)
+    vf = (v.astype(jnp.float32) * v_scale[..., None]).astype(q.dtype)
+    return decode_attention_ref(q, kf, vf, pos, slot_pos, window=window)

@@ -1,0 +1,31 @@
+"""Pure-jnp oracle: time-scan mLSTM recurrence (mirrors models.xlstm)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def mlstm_scan_ref(q, k, v, ig, fg):
+    """q/k/v: (BH, S, dh); ig/fg: (BH, S, 1). Returns (BH, S, dh)."""
+    BH, S, dh = q.shape
+
+    def step(carry, xs):
+        C, n, m = carry
+        q_t, k_t, v_t, ig_t, fg_t = xs
+        logf = jax.nn.log_sigmoid(fg_t)
+        m_new = jnp.maximum(logf + m, ig_t)
+        i_p = jnp.exp(ig_t - m_new)
+        f_p = jnp.exp(logf + m - m_new)
+        C = f_p[..., None] * C + i_p[..., None] * (
+            v_t[..., :, None] * k_t[..., None, :])
+        n = f_p * n + i_p * k_t
+        num = jnp.einsum("bij,bj->bi", C, q_t)
+        den = jnp.maximum(jnp.abs(jnp.sum(n * q_t, -1, keepdims=True)), 1.0)
+        return (C, n, m_new), num / den
+
+    t = lambda a: a.transpose(1, 0, 2)
+    carry = (jnp.zeros((BH, dh, dh)), jnp.zeros((BH, dh)),
+             jnp.full((BH, 1), -1e30))
+    xs = (t(q), t(k), t(v), t(ig), t(fg))
+    _, hs = jax.lax.scan(step, carry, xs)
+    return hs.transpose(1, 0, 2)

@@ -1,0 +1,23 @@
+"""Pure-jnp oracle for the selective scan (mirrors models.ssm._ssm_step)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssm_scan_ref(x, decay, dt, b, c):
+    """x: (BH,S,P); decay/dt: (BH,S,1); b/c: (BH,S,N) -> y (BH,S,P)."""
+    BH, S, P = x.shape
+    N = b.shape[-1]
+
+    def step(state, xs):
+        x_t, dec, dt_t, b_t, c_t = xs
+        state = state * dec[..., None] + \
+            (dt_t * x_t)[..., :, None] * b_t[..., None, :]
+        y = jnp.einsum("bpn,bn->bp", state, c_t)
+        return state, y
+
+    t = lambda a: a.transpose(1, 0, 2)
+    state = jnp.zeros((BH, P, N))
+    _, ys = jax.lax.scan(step, state, (t(x), t(decay), t(dt), t(b), t(c)))
+    return ys.transpose(1, 0, 2)

@@ -1,0 +1,152 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture x input shape)
+on the production meshes, print memory/cost analysis, and persist the
+roofline inputs (collective bytes parsed from post-SPMD HLO).
+
+MUST be the process entry (the XLA_FLAGS line above runs before any jax
+import — device count locks at first init):
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch all --shape all
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+
+from repro.analysis.flops import roofline_terms, step_cost
+from repro.analysis.hlo import collective_bytes
+from repro.configs import ARCH_IDS, get_config
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import build_lowering, scan_trip_counts
+from repro.shapes import SHAPE_NAMES, get_shape
+from repro.utils.shardctx import use_mesh
+
+
+def run_one(arch: str, shape_name: str, multi_pod: bool, outdir: str,
+            verbose: bool = True, **build_kw) -> dict:
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.size
+    mesh_name = "multipod_2x16x16" if multi_pod else "pod_16x16"
+    t0 = time.time()
+    step, args, shardings, meta = build_lowering(arch, shape_name, mesh,
+                                                 **build_kw)
+    cfg = meta["cfg"]
+    with use_mesh(mesh):
+        lowered = jax.jit(step, in_shardings=shardings).lower(*args)
+        compiled = lowered.compile()
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis() or {}
+    trips = scan_trip_counts(cfg)
+    stats = collective_bytes(compiled.as_text(), trips)
+
+    analytic = step_cost(cfg, get_shape(shape_name))
+    terms = roofline_terms(analytic, chips, stats.total_bytes / chips
+                           * chips)  # collective bytes are global
+    rec = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name,
+        "chips": chips, "lower_compile_s": round(time.time() - t0, 2),
+        "memory": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "peak_per_device_gb": round(
+                (mem.argument_size_in_bytes + mem.temp_size_in_bytes)
+                / 2**30, 3),
+        },
+        "hlo_cost": {"flops_per_device": cost.get("flops", 0.0),
+                     "bytes_per_device": cost.get("bytes accessed", 0.0)},
+        "analytic": {
+            "flops": analytic.flops,
+            "weight_bytes": analytic.weight_bytes,
+            "kv_bytes": analytic.kv_bytes,
+            "act_bytes": analytic.act_bytes,
+            "model_flops_6nd": 6.0 * cfg.n_active_params()
+            * get_shape(shape_name).global_batch
+            * (get_shape(shape_name).seq_len
+               if get_shape(shape_name).kind == "train" else 1),
+        },
+        "collectives": {
+            "total_bytes": stats.total_bytes,
+            "by_kind_bytes": dict(stats.bytes_by_kind),
+            "counts": dict(stats.counts),
+            "scan_trips": trips,
+        },
+        "roofline": terms,
+    }
+    if verbose:
+        print(f"[{mesh_name}] {arch} x {shape_name}: "
+              f"compile={rec['lower_compile_s']}s "
+              f"peak/dev={rec['memory']['peak_per_device_gb']}GB "
+              f"coll={stats.total_bytes/2**30:.2f}GiB "
+              f"dominant={terms['dominant']}")
+        print(f"  memory_analysis: {mem}")
+    if outdir:
+        os.makedirs(outdir, exist_ok=True)
+        path = os.path.join(outdir, f"{mesh_name}__{arch}__{shape_name}.json")
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=1)
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all",
+                    help=f"one of {ARCH_IDS} or 'all'")
+    ap.add_argument("--shape", default="all",
+                    help=f"one of {SHAPE_NAMES} or 'all'")
+    ap.add_argument("--mesh", default="both",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="results/dryrun")
+    # §Perf knobs (EXPERIMENTS.md §Perf). --variant baseline disables every
+    # beyond-baseline optimization for a paper-faithful reference lowering.
+    ap.add_argument("--variant", default="optimized",
+                    choices=["baseline", "optimized"])
+    ap.add_argument("--microbatch", type=int, default=1,
+                    help="gradient-accumulation chunks (train shapes, H3)")
+    ap.add_argument("--zero2", action="store_true",
+                    help="shard the grad accumulator (H4; needs microbatch>1)")
+    ap.add_argument("--kv-quant", action="store_true",
+                    help="int8 KV cache (decode shapes, H5)")
+    args = ap.parse_args()
+
+    build_kw = dict(microbatch=args.microbatch, zero2=args.zero2,
+                    kv_quant=args.kv_quant)
+    if args.variant == "baseline":
+        os.environ["REPRO_MOE_EP"] = "0"
+        build_kw = dict(zero1=False)
+
+    archs = ARCH_IDS if args.arch == "all" else args.arch.split(",")
+    shapes = SHAPE_NAMES if args.shape == "all" else args.shape.split(",")
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    failures = []
+    n_ok = n_skip = 0
+    for multi in meshes:
+        for arch in archs:
+            cfg = get_config(arch)
+            for shape in shapes:
+                if shape == "long_500k" and not cfg.supports_long_context:
+                    print(f"SKIP {arch} x long_500k "
+                          f"(no sub-quadratic path, DESIGN.md §4)")
+                    n_skip += 1
+                    continue
+                try:
+                    run_one(arch, shape, multi, args.out, **build_kw)
+                    n_ok += 1
+                except Exception as e:  # noqa: BLE001
+                    failures.append((arch, shape, multi, repr(e)))
+                    print(f"FAIL {arch} x {shape} multi={multi}: {e}")
+                    traceback.print_exc(limit=4)
+    print(f"\ndry-run complete: {n_ok} ok, {n_skip} skipped, "
+          f"{len(failures)} failed")
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

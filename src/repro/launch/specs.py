@@ -1,0 +1,154 @@
+"""Abstract input specs + shardings for every (arch x input-shape x mesh).
+
+``build_lowering(arch, shape, mesh)`` returns (fn, args, in_shardings,
+meta) ready for ``jax.jit(fn, in_shardings=...).lower(*args)`` — all
+arguments are ShapeDtypeStructs (weak-type-correct, shardable, no device
+allocation)."""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import get_config
+from repro.models import build_model, decode_cache_plan
+from repro.models.common import batch_axes
+from repro.shapes import get_shape
+from repro.training.optimizer import AdamWConfig, AdamWState
+from repro.training.trainer import make_train_step
+from repro.utils.shardctx import _sanitize
+
+
+def _ns(mesh, spec: P) -> NamedSharding:
+    return NamedSharding(mesh, spec)
+
+
+def _sanitized(mesh, shape: Tuple[int, ...], entries) -> NamedSharding:
+    entries = tuple(entries) + (None,) * (len(shape) - len(entries))
+    return _ns(mesh, _sanitize(shape, entries, mesh))
+
+
+def batch_shardings(mesh, batch_abs: Dict[str, jax.ShapeDtypeStruct]):
+    ba = batch_axes(mesh)
+    return {k: _sanitized(mesh, v.shape, (ba,))
+            for k, v in batch_abs.items()}
+
+
+def cache_shardings(mesh, cache_abs):
+    """Baseline cache sharding: (L, B, S, ...) -> batch over data axes,
+    cache length over the model axis where divisible (flash-decoding-
+    style length parallelism), else replicated."""
+    ba = batch_axes(mesh)
+
+    def leaf(x):
+        if x.ndim >= 3:
+            return _sanitized(mesh, x.shape, (None, ba, "model"))
+        if x.ndim == 2:
+            return _sanitized(mesh, x.shape, (None, ba))
+        return _ns(mesh, P())
+
+    return jax.tree.map(leaf, cache_abs)
+
+
+def params_shardings(mesh, model):
+    pspecs = model.partition_specs(mesh)
+    return jax.tree.map(lambda s: _ns(mesh, s), pspecs)
+
+
+def abstract_opt_state(params_abs) -> AdamWState:
+    f32 = lambda x: jax.ShapeDtypeStruct(x.shape, jnp.float32)
+    return AdamWState(jax.ShapeDtypeStruct((), jnp.int32),
+                      jax.tree.map(f32, params_abs),
+                      jax.tree.map(f32, params_abs))
+
+
+def build_lowering(arch_id: str, shape_name: str, mesh,
+                   opt_cfg: AdamWConfig = AdamWConfig(),
+                   zero1: bool = True, microbatch: int = 1,
+                   zero2: bool = False, kv_quant: bool = False):
+    cfg = get_config(arch_id)
+    if kv_quant:
+        import dataclasses
+        cfg = dataclasses.replace(cfg, kv_quant=True)
+    shape = get_shape(shape_name)
+    if shape_name == "long_500k" and not cfg.supports_long_context:
+        raise ValueError(f"{arch_id} skips long_500k (DESIGN.md §4)")
+    model = build_model(cfg)
+    params_abs = model.abstract_params()
+    params_sh = params_shardings(mesh, model)
+    batch_abs = model.make_batch(shape, abstract=True)
+    batch_sh = batch_shardings(mesh, batch_abs)
+    meta = {"arch": arch_id, "shape": shape_name, "cfg": cfg,
+            "model": model, "kind": shape.kind}
+
+    if shape.kind == "train":
+        z1 = zero1_shardings(mesh, model)
+        step = make_train_step(model, opt_cfg, microbatch=microbatch,
+                               grad_sharding=z1 if zero2 else None)
+        opt_abs = abstract_opt_state(params_abs)
+        opt_sh = AdamWState(_ns(mesh, P()), z1, z1) if zero1 \
+            else AdamWState(_ns(mesh, P()), params_sh, params_sh)
+        return (step, (params_abs, opt_abs, batch_abs),
+                (params_sh, opt_sh, batch_sh), meta)
+
+    plan = decode_cache_plan(cfg, shape.seq_len)
+    meta["plan"] = plan
+    if shape.kind == "prefill":
+        def step(params, batch):
+            return model.prefill_fn(params, batch, cache_len=plan.length,
+                                    ring=plan.ring)
+        return step, (params_abs, batch_abs), (params_sh, batch_sh), meta
+
+    # decode: ONE token against a seq_len cache
+    cache_abs = model.zero_cache(shape.global_batch, plan, abstract=True)
+    cache_sh = cache_shardings(mesh, cache_abs)
+    pos_abs = jax.ShapeDtypeStruct((), jnp.int32)
+
+    def step(params, cache, tokens, pos):
+        return model.decode_fn(params, cache, tokens, pos, ring=plan.ring)
+
+    args = (params_abs, cache_abs, batch_abs["tokens"], pos_abs)
+    shardings = (params_sh, cache_sh, batch_sh["tokens"], _ns(mesh, P()))
+    return step, args, shardings, meta
+
+
+def params_sh_f32(mesh, model):
+    pspecs = model.partition_specs(mesh)
+    return jax.tree.map(lambda s: _ns(mesh, s), pspecs)
+
+
+def zero1_shardings(mesh, model):
+    """ZeRO-1 optimizer-state sharding: on top of each parameter's tensor-
+    parallel spec, shard the largest still-replicated divisible dim over
+    the data axes. Optimizer state is touched only inside the update, so
+    the extra gather cost is one params-sized all-gather per step while
+    the resident f32 m/v drop by the data-parallel factor (§Perf H2)."""
+    ba = batch_axes(mesh)
+    n_data = 1
+    for a in ba:
+        n_data *= mesh.shape[a]
+    params_abs = model.abstract_params()
+    pspecs = model.partition_specs(mesh)
+
+    def leaf(x, spec):
+        entries = list(spec) + [None] * (x.ndim - len(spec))
+        best, best_size = -1, 0
+        for i, (size, e) in enumerate(zip(x.shape, entries)):
+            if e is None and size % n_data == 0 and size > best_size:
+                best, best_size = i, size
+        if best >= 0:
+            entries[best] = ba if len(ba) > 1 else ba[0]
+        return _ns(mesh, P(*entries))
+
+    return jax.tree.map(leaf, params_abs, pspecs)
+
+
+def scan_trip_counts(cfg) -> int:
+    """Trip count used to scale while-body collectives in the HLO parse.
+    Layer scans dominate; the max trip count is a safe single scalar for
+    per-arch scaling (inner time-chunk scans carry no collectives)."""
+    if cfg.family == "ssm":
+        return cfg.n_layers // 2
+    return max(cfg.n_layers, cfg.n_encoder_layers or 0)

@@ -1,0 +1,2 @@
+from repro.memory.manager import DeviceMemoryManager, GB
+from repro.memory.pool import WarmPool, Container

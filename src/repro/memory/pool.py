@@ -1,0 +1,93 @@
+"""Container warm pool (paper §4.2 "Container Warm-pool", Fig. 8c).
+
+A *container* here is an initialized endpoint instance: the model's
+compiled executable + host-side weights (the FaaS "initialized process").
+Whether its weights are on-device is the memory manager's concern — the
+pool only answers "does an initialized instance exist?", giving the three
+start types:
+
+  warm       — idle container exists AND weights device-resident
+  host_warm  — idle container exists, weights swapped out ("GPU-cold but
+               host-warm" in the paper)
+  cold       — no container: pay full initialization
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+
+@dataclass
+class Container:
+    fn_id: str
+    created: float
+    last_use: float
+    busy: bool = False
+
+
+class WarmPool:
+    def __init__(self, max_containers: int = 32):
+        self.max_containers = max_containers
+        self.containers: List[Container] = []
+        # stats
+        self.cold_starts = 0
+        self.warm_starts = 0
+        self.host_warm_starts = 0
+        self.evictions = 0
+
+    def _idle(self, fn_id: str) -> Optional[Container]:
+        best = None
+        for c in self.containers:
+            if c.fn_id == fn_id and not c.busy:
+                if best is None or c.last_use > best.last_use:
+                    best = c
+        return best
+
+    def count(self, fn_id: Optional[str] = None) -> int:
+        if fn_id is None:
+            return len(self.containers)
+        return sum(1 for c in self.containers if c.fn_id == fn_id)
+
+    def _evict_lru(self) -> bool:
+        idle = [c for c in self.containers if not c.busy]
+        if not idle:
+            return False
+        victim = min(idle, key=lambda c: c.last_use)
+        self.containers.remove(victim)
+        self.evictions += 1
+        return True
+
+    def acquire(self, fn_id: str, now: float,
+                device_resident: bool) -> Tuple[Container, str]:
+        """Returns (container, start_type)."""
+        c = self._idle(fn_id)
+        if c is not None:
+            c.busy = True
+            c.last_use = now
+            if device_resident:
+                self.warm_starts += 1
+                return c, "warm"
+            self.host_warm_starts += 1
+            return c, "host_warm"
+        # need a new container
+        while len(self.containers) >= self.max_containers:
+            if not self._evict_lru():
+                break  # everything busy: exceed pool rather than deadlock
+        c = Container(fn_id, created=now, last_use=now, busy=True)
+        self.containers.append(c)
+        self.cold_starts += 1
+        return c, "cold"
+
+    def release(self, c: Container, now: float) -> None:
+        c.busy = False
+        c.last_use = now
+
+    def evict_fn(self, fn_id: str) -> None:
+        """Drop idle containers of an inactive function (LRU keep-alive)."""
+        self.containers = [
+            c for c in self.containers if c.busy or c.fn_id != fn_id]
+
+    @property
+    def cold_hit_pct(self) -> float:
+        total = self.cold_starts + self.warm_starts + self.host_warm_starts
+        return 100.0 * self.cold_starts / total if total else 0.0

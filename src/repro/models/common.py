@@ -1,0 +1,145 @@
+"""Shared model machinery: parameter tables, norms, RoPE, initializers.
+
+A model is described by a *parameter table*: a nested dict of ``ParamDef``.
+One table drives three views:
+  - ``abstract_params``  -> ShapeDtypeStruct tree (dry-run, no allocation)
+  - ``init_params``      -> initialized arrays (smoke tests / training)
+  - ``partition_specs``  -> PartitionSpec tree, divisibility-sanitized
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+
+
+@dataclass(frozen=True)
+class ParamDef:
+    shape: Tuple[int, ...]
+    # logical spec entries: a mesh-axis name (or tuple of names) or None per dim
+    pspec: Tuple[Any, ...]
+    init: str = "normal"  # normal | zeros | ones
+    scale: Optional[float] = None  # None -> 1/sqrt(fan_in)
+    dtype: Optional[str] = None
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.pspec), (self.shape, self.pspec)
+
+
+def _is_def(x) -> bool:
+    return isinstance(x, ParamDef)
+
+
+def abstract_params(table, config: ModelConfig):
+    def mk(d: ParamDef):
+        return jax.ShapeDtypeStruct(d.shape, jnp.dtype(d.dtype or config.param_dtype))
+    return jax.tree.map(mk, table, is_leaf=_is_def)
+
+
+def init_params(table, config: ModelConfig, rng: jax.Array):
+    defs, treedef = jax.tree.flatten(table, is_leaf=_is_def)
+    keys = jax.random.split(rng, len(defs))
+    out = []
+    for d, k in zip(defs, keys):
+        dt = jnp.dtype(d.dtype or config.param_dtype)
+        if d.init == "zeros":
+            out.append(jnp.zeros(d.shape, dt))
+        elif d.init == "ones":
+            out.append(jnp.ones(d.shape, dt))
+        else:
+            fan_in = d.shape[-2] if len(d.shape) >= 2 else d.shape[-1]
+            scale = d.scale if d.scale is not None else fan_in ** -0.5
+            out.append((jax.random.normal(k, d.shape, jnp.float32) * scale).astype(dt))
+    return jax.tree.unflatten(treedef, out)
+
+
+def sanitize_spec(d: ParamDef, mesh) -> P:
+    """Drop sharding on dims not divisible by the mesh axis size.
+
+    jax rejects uneven in_shardings (verified empirically), so any dim whose
+    size is not divisible by the product of its assigned axes is replicated.
+    """
+    entries = []
+    for size, ax in zip(d.shape, d.pspec):
+        if ax is None:
+            entries.append(None)
+            continue
+        axes = ax if isinstance(ax, tuple) else (ax,)
+        if not all(a in mesh.shape for a in axes):
+            entries.append(None)
+            continue
+        n = 1
+        for a in axes:
+            n *= mesh.shape[a]
+        entries.append(ax if (n > 0 and size % n == 0) else None)
+    return P(*entries)
+
+
+def partition_specs(table, mesh):
+    return jax.tree.map(lambda d: sanitize_spec(d, mesh), table, is_leaf=_is_def)
+
+
+def batch_axes(mesh) -> Any:
+    """Mesh axes used for the batch dim: ('pod','data') when multi-pod."""
+    return ("pod", "data") if "pod" in mesh.shape else ("data",)
+
+
+def batch_pspec(mesh, size: int, *trailing) -> P:
+    axes = batch_axes(mesh)
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    first = axes if size % n == 0 else None
+    return P(first, *trailing)
+
+
+# --- numerics ---------------------------------------------------------------
+
+def rms_norm(x, w, eps: float = 1e-6):
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps)).astype(x.dtype) * w
+
+
+def layer_norm(x, w, b, eps: float = 1e-5):
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return y.astype(x.dtype) * w + b
+
+
+def rope(x, positions, theta: float, partial: bool = False):
+    """Rotary embedding. x: (..., S, H, dh); positions: (S,) or (B, S).
+
+    ``partial`` (chatglm rope-2d): rotate only the first half of head_dim.
+    """
+    dh = x.shape[-1]
+    rot = dh // 2 if partial else dh
+    x_rot, x_pass = x[..., :rot], x[..., rot:]
+    half = rot // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., S, half)
+    cos = jnp.cos(ang)[..., None, :]  # broadcast over head axis
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x_rot[..., :half], x_rot[..., half:]
+    y = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1).astype(x.dtype)
+    return jnp.concatenate([y, x_pass], axis=-1) if partial else y
+
+
+def cross_entropy(logits, labels, ignore: int = -1):
+    """Mean CE over non-ignored positions. logits (..., V), labels (...)."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(
+        logits, labels[..., None].clip(0), axis=-1)[..., 0]
+    mask = (labels != ignore).astype(jnp.float32)
+    loss = (lse - ll) * mask
+    return loss.sum() / jnp.maximum(mask.sum(), 1.0)

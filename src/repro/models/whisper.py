@@ -1,0 +1,278 @@
+"""Whisper-style encoder-decoder backbone (arXiv:2212.04356).
+
+The mel-spectrogram + conv feature extractor is a STUB: callers provide
+precomputed frame embeddings (B, encoder_len, d_model). Encoder is
+bidirectional with sinusoidal positions; decoder is causal with a learned
+position table (sized cfg.max_positions) plus per-layer cross attention.
+LayerNorm with bias + GELU MLPs, per the published model.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models.common import ParamDef, layer_norm
+from repro.utils.shardctx import batch_axis, maybe_shard
+
+PREFILL_CHUNK = 1024
+
+
+def _attn_defs(L, d, H, dh, prefix=""):
+    return {
+        prefix + "ln_w": ParamDef((L, d), (None, None), init="ones"),
+        prefix + "ln_b": ParamDef((L, d), (None, None), init="zeros"),
+        prefix + "wq": ParamDef((L, d, H * dh), (None, None, "model")),
+        prefix + "wk": ParamDef((L, d, H * dh), (None, None, "model")),
+        prefix + "wv": ParamDef((L, d, H * dh), (None, None, "model")),
+        prefix + "wo": ParamDef((L, H * dh, d), (None, "model", None)),
+    }
+
+
+def _mlp_defs(L, d, f, prefix=""):
+    return {
+        prefix + "mln_w": ParamDef((L, d), (None, None), init="ones"),
+        prefix + "mln_b": ParamDef((L, d), (None, None), init="zeros"),
+        prefix + "w1": ParamDef((L, d, f), (None, None, "model")),
+        prefix + "b1": ParamDef((L, f), (None, "model"), init="zeros"),
+        prefix + "w2": ParamDef((L, f, d), (None, "model", None)),
+        prefix + "b2": ParamDef((L, d), (None, None), init="zeros"),
+    }
+
+
+def whisper_param_table(cfg: ModelConfig) -> Dict:
+    d, dh, H = cfg.d_model, cfg.head_dim, cfg.n_heads
+    Le, Ld, f = cfg.n_encoder_layers, cfg.n_layers, cfg.d_ff
+    enc = {**_attn_defs(Le, d, H, dh), **_mlp_defs(Le, d, f)}
+    dec = {**_attn_defs(Ld, d, H, dh),
+           **_attn_defs(Ld, d, H, dh, prefix="x_"),
+           **_mlp_defs(Ld, d, f)}
+    return {
+        "emb": ParamDef((cfg.vocab_size, d), ("model", None)),
+        "dec_pos": ParamDef((cfg.max_positions, d), (None, None),
+                            scale=0.02),
+        "enc_layers": enc,
+        "dec_layers": dec,
+        "enc_norm_w": ParamDef((d,), (None,), init="ones"),
+        "enc_norm_b": ParamDef((d,), (None,), init="zeros"),
+        "dec_norm_w": ParamDef((d,), (None,), init="ones"),
+        "dec_norm_b": ParamDef((d,), (None,), init="zeros"),
+    }
+
+
+def _sinusoid(S: int, d: int):
+    pos = jnp.arange(S, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(d // 2, dtype=jnp.float32)[None, :]
+    ang = pos / (10_000.0 ** (dim / max(d // 2 - 1, 1)))
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def _mha(cfg, p, xq, xkv, *, causal, q_pos=None, k_pos=None, prefix="",
+         kv_override=None):
+    B, Sq, d = xq.shape
+    H, dh = cfg.n_heads, cfg.head_dim
+    q = (xq @ p[prefix + "wq"]).reshape(B, Sq, H, dh)
+    if kv_override is not None:
+        k, v = kv_override
+    else:
+        Sk = xkv.shape[1]
+        k = (xkv @ p[prefix + "wk"]).reshape(B, Sk, H, dh)
+        v = (xkv @ p[prefix + "wv"]).reshape(B, Sk, H, dh)
+    Sk = k.shape[1]
+    if q_pos is None:
+        q_pos = jnp.arange(Sq)
+    if k_pos is None:
+        k_pos = jnp.arange(Sk)
+    chunk = PREFILL_CHUNK if Sq > 2 * PREFILL_CHUNK else 0
+    fn = attn.chunked_attention if chunk else attn.masked_attention
+    kw = {"chunk": chunk} if chunk else {}
+    out = fn(q, k, v, q_pos, k_pos, causal=causal, **kw)
+    out = out.reshape(B, Sq, H * dh)
+    return out @ p[prefix + "wo"], (k, v)
+
+
+def encode(cfg: ModelConfig, params, frames):
+    """frames: (B, encoder_len, d_model) stub embeddings -> encoder output."""
+    x = frames.astype(cfg.compute_dtype)
+    x = x + _sinusoid(x.shape[1], cfg.d_model).astype(x.dtype)
+    x = maybe_shard(x, batch_axis())
+
+    @jax.checkpoint
+    def body(x, p):
+        xn = layer_norm(x, p["ln_w"], p["ln_b"])
+        a, _ = _mha(cfg, p, xn, xn, causal=False)
+        x = x + a
+        xn = layer_norm(x, p["mln_w"], p["mln_b"])
+        h = jax.nn.gelu(xn @ p["w1"] + p["b1"])
+        x = x + (h @ p["w2"] + p["b2"])
+        return x, None
+
+    x, _ = jax.lax.scan(body, x, params["enc_layers"])
+    return layer_norm(x, params["enc_norm_w"], params["enc_norm_b"])
+
+
+def _dec_block(cfg, p, x, layer_cache, pos, mode):
+    """Decoder block; layer_cache holds self k/v + cross k/v."""
+    B, S, _ = x.shape
+    new_cache = None
+    xn = layer_norm(x, p["ln_w"], p["ln_b"])
+    if mode == "train":
+        a, _ = _mha(cfg, p, xn, xn, causal=True)
+    elif mode == "prefill":
+        a, (k, v) = _mha(cfg, p, xn, xn, causal=True)
+        if cfg.kv_quant:
+            k, sk = attn.quantize_kv(k)
+            v, sv = attn.quantize_kv(v)
+        ck, cv = attn.cache_write_full(
+            layer_cache["k"], layer_cache["v"], k, v, 0)
+        new_cache = {"k": ck, "v": cv}
+        if cfg.kv_quant:
+            cks, cvs = attn.cache_write_full(
+                layer_cache["k_scale"], layer_cache["v_scale"], sk, sv, 0)
+            new_cache.update(k_scale=cks, v_scale=cvs)
+    else:  # decode
+        H, dh = cfg.n_heads, cfg.head_dim
+        q = (xn @ p["wq"]).reshape(B, 1, H, dh)
+        k = (xn @ p["wk"]).reshape(B, 1, H, dh)
+        v = (xn @ p["wv"]).reshape(B, 1, H, dh)
+        if cfg.kv_quant:
+            k, sk = attn.quantize_kv(k)
+            v, sv = attn.quantize_kv(v)
+        ck = jax.lax.dynamic_update_slice_in_dim(
+            layer_cache["k"], k.astype(layer_cache["k"].dtype), pos, axis=1)
+        cv = jax.lax.dynamic_update_slice_in_dim(
+            layer_cache["v"], v.astype(layer_cache["v"].dtype), pos, axis=1)
+        new_cache = {"k": ck, "v": cv}
+        if cfg.kv_quant:
+            cks = jax.lax.dynamic_update_slice_in_dim(
+                layer_cache["k_scale"], sk, pos, axis=1)
+            cvs = jax.lax.dynamic_update_slice_in_dim(
+                layer_cache["v_scale"], sv, pos, axis=1)
+            new_cache.update(k_scale=cks, v_scale=cvs)
+            ck = attn.dequantize_kv(ck, cks, cfg.compute_dtype)
+            cv = attn.dequantize_kv(cv, cvs, cfg.compute_dtype)
+        out = attn.decode_attention(q, ck, cv, pos)
+        a = out.reshape(B, 1, H * dh) @ p["wo"]
+    x = x + a
+
+    # cross attention: k/v cached after encode
+    xn = layer_norm(x, p["x_ln_w"], p["x_ln_b"])
+    if mode == "train":
+        a, _ = _mha(cfg, p, xn, layer_cache["enc"], causal=False,
+                    prefix="x_")
+    else:
+        xk, xv = layer_cache["ck"], layer_cache["cv"]
+        if cfg.kv_quant:
+            new_cache.update(ck_scale=layer_cache["ck_scale"],
+                             cv_scale=layer_cache["cv_scale"])
+            xk = attn.dequantize_kv(xk, layer_cache["ck_scale"],
+                                    cfg.compute_dtype)
+            xv = attn.dequantize_kv(xv, layer_cache["cv_scale"],
+                                    cfg.compute_dtype)
+        a, _ = _mha(cfg, p, xn, None, causal=False, prefix="x_",
+                    kv_override=(xk, xv))
+        new_cache.update({"ck": layer_cache["ck"], "cv": layer_cache["cv"]})
+    x = x + a
+
+    xn = layer_norm(x, p["mln_w"], p["mln_b"])
+    h = jax.nn.gelu(xn @ p["w1"] + p["b1"])
+    return x + (h @ p["w2"] + p["b2"]), new_cache
+
+
+def _dec_embed(cfg, params, tokens, pos):
+    x = params["emb"][tokens].astype(cfg.compute_dtype)
+    S = tokens.shape[1]
+    posv = jax.lax.dynamic_slice_in_dim(params["dec_pos"], pos, S)
+    return maybe_shard(x + posv.astype(x.dtype), batch_axis())
+
+
+def forward(cfg: ModelConfig, params, tokens, frames):
+    """Teacher-forced decoder logits; encoder run inline."""
+    enc = encode(cfg, params, frames)
+    x = _dec_embed(cfg, params, tokens, 0)
+
+    @jax.checkpoint
+    def body(x, p):
+        x = maybe_shard(x, batch_axis(), "model")  # sequence-parallel carry
+        x, _ = _dec_block(cfg, p, x, {"enc": enc}, 0, "train")
+        return x, None
+
+    x, _ = jax.lax.scan(body, x, params["dec_layers"])
+    x = layer_norm(x, params["dec_norm_w"], params["dec_norm_b"])
+    logits = x @ params["emb"].T.astype(x.dtype)
+    return maybe_shard(logits, batch_axis(), None, "model"), \
+        jnp.zeros((), jnp.float32)
+
+
+def cache_shapes(cfg: ModelConfig, batch: int, cache_len: int) -> Dict:
+    L, H, dh = cfg.n_layers, cfg.n_heads, cfg.head_dim
+    dt = jnp.int8 if cfg.kv_quant else cfg.compute_dtype
+    shapes = {
+        "k": ((L, batch, cache_len, H, dh), dt),
+        "v": ((L, batch, cache_len, H, dh), dt),
+        "ck": ((L, batch, cfg.encoder_len, H, dh), dt),
+        "cv": ((L, batch, cfg.encoder_len, H, dh), dt),
+    }
+    if cfg.kv_quant:  # per-(token, head) f32 scales (§Perf H5)
+        shapes["k_scale"] = ((L, batch, cache_len, H), jnp.float32)
+        shapes["v_scale"] = ((L, batch, cache_len, H), jnp.float32)
+        shapes["ck_scale"] = ((L, batch, cfg.encoder_len, H), jnp.float32)
+        shapes["cv_scale"] = ((L, batch, cfg.encoder_len, H), jnp.float32)
+    return shapes
+
+
+def zero_cache(cfg, batch, cache_len, abstract=False):
+    sh = cache_shapes(cfg, batch, cache_len)
+    if abstract:
+        return {k: jax.ShapeDtypeStruct(s, d) for k, (s, d) in sh.items()}
+    return {k: jnp.zeros(s, d) for k, (s, d) in sh.items()}
+
+
+def prefill(cfg: ModelConfig, params, tokens, frames,
+            cache_len: Optional[int] = None):
+    """Encode audio, prefill decoder prompt; returns (logits, cache)."""
+    enc = encode(cfg, params, frames)
+    B, S = tokens.shape
+    cache_len = cache_len or S
+    cache = zero_cache(cfg, B, cache_len)
+    H, dh = cfg.n_heads, cfg.head_dim
+    x = _dec_embed(cfg, params, tokens, 0)
+
+    def body(x, xs):
+        p, layer_cache = xs
+        # fill cross-cache from encoder output
+        Sk = enc.shape[1]
+        ck = (enc @ p["x_wk"]).reshape(B, Sk, H, dh)
+        cv = (enc @ p["x_wv"]).reshape(B, Sk, H, dh)
+        if cfg.kv_quant:
+            ck, cks = attn.quantize_kv(ck)
+            cv, cvs = attn.quantize_kv(cv)
+            lc = dict(layer_cache, ck=ck, cv=cv, ck_scale=cks, cv_scale=cvs)
+        else:
+            lc = dict(layer_cache,
+                      ck=ck.astype(layer_cache["ck"].dtype),
+                      cv=cv.astype(layer_cache["cv"].dtype))
+        x, new_cache = _dec_block(cfg, p, x, lc, 0, "prefill")
+        return x, new_cache
+
+    x, cache = jax.lax.scan(body, x, (params["dec_layers"], cache))
+    x = layer_norm(x[:, -1:], params["dec_norm_w"], params["dec_norm_b"])
+    logits = x @ params["emb"].T.astype(x.dtype)
+    return logits[:, 0], cache
+
+
+def decode_step(cfg: ModelConfig, params, cache, tokens, pos):
+    x = _dec_embed(cfg, params, tokens, pos)
+
+    def body(x, xs):
+        p, layer_cache = xs
+        x, new_cache = _dec_block(cfg, p, x, layer_cache, pos, "decode")
+        return x, new_cache
+
+    x, cache = jax.lax.scan(body, x, (params["dec_layers"], cache))
+    x = layer_norm(x, params["dec_norm_w"], params["dec_norm_b"])
+    logits = x @ params["emb"].T.astype(x.dtype)
+    return logits[:, 0], cache

@@ -1,0 +1,75 @@
+"""xLSTM full-model stack: scan over (mLSTM, sLSTM) pair blocks.
+
+The recurrent state (C, n, m / c, n, m, h) *is* the serve cache — decode
+cost is independent of context length, which is why this arch runs
+long_500k natively.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import xlstm
+from repro.models.common import rms_norm
+from repro.utils.shardctx import batch_axis, maybe_shard
+
+
+def param_table(cfg: ModelConfig) -> Dict:
+    return xlstm.xlstm_param_table(cfg)
+
+
+def state_shapes(cfg: ModelConfig, batch: int) -> Tuple:
+    """Pytree of ((shape, dtype)) with leading pair-block dim P."""
+    P = cfg.n_layers // 2
+    per = xlstm.pair_state_shapes(cfg, batch)
+    return jax.tree.map(lambda sd: ((P,) + sd[0], sd[1]), per,
+                        is_leaf=lambda x: isinstance(x, tuple)
+                        and len(x) == 2 and isinstance(x[0], tuple))
+
+
+def zero_state(cfg: ModelConfig, batch: int, abstract: bool = False):
+    sh = state_shapes(cfg, batch)
+    leaf = lambda x: isinstance(x, tuple) and len(x) == 2 \
+        and isinstance(x[0], tuple)
+    if abstract:
+        return jax.tree.map(lambda sd: jax.ShapeDtypeStruct(*sd), sh,
+                            is_leaf=leaf)
+    return jax.tree.map(lambda sd: jnp.zeros(*sd), sh, is_leaf=leaf)
+
+
+def _run(cfg: ModelConfig, params, tokens, state, remat: bool):
+    x = params["emb"][tokens].astype(cfg.compute_dtype)
+    x = maybe_shard(x, batch_axis())
+
+    def body(x, xs):
+        p_pair, st = xs
+        x = maybe_shard(x, batch_axis(), "model")  # sequence-parallel carry
+        x, new_st = xlstm.pair_apply(cfg, p_pair, x, st)
+        return x, new_st
+
+    if remat:
+        body = jax.checkpoint(body)
+    x, state = jax.lax.scan(body, x, (params["pairs"], state))
+    x = rms_norm(x, params["final_norm"])
+    logits = x @ params["lm_head"].astype(x.dtype)
+    return maybe_shard(logits, batch_axis(), None, "model"), state
+
+
+def forward(cfg: ModelConfig, params, tokens):
+    state = zero_state(cfg, tokens.shape[0])
+    logits, _ = _run(cfg, params, tokens, state, remat=True)
+    return logits, jnp.zeros((), jnp.float32)
+
+
+def prefill(cfg: ModelConfig, params, tokens, cache_len=None):
+    state = zero_state(cfg, tokens.shape[0])
+    logits, state = _run(cfg, params, tokens, state, remat=False)
+    return logits[:, -1], state
+
+
+def decode_step(cfg: ModelConfig, params, state, tokens, pos):
+    logits, state = _run(cfg, params, tokens, state, remat=False)
+    return logits[:, 0], state

@@ -1,0 +1,120 @@
+"""Real-execution endpoints: the JAX device path.
+
+A ``JaxEndpoint`` is one serveable function: a model (reduced config on
+CPU; full config on a real slice), host-resident weights (numpy), and
+jitted prefill/decode executables. The memory manager's abstract
+"regions" map to real bytes here:
+
+  cold       — build + compile + upload   (first instantiation)
+  host_warm  — weights evicted from device: re-upload only
+  warm       — device-resident: execute immediately
+
+On the CPU test rig "host" is numpy and "device" is jax.Array — upload
+(``jax.device_put``) and eviction are real operations with real cost,
+so the control-plane integration is exercised end to end.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import build_model, decode_cache_plan
+from repro.shapes import InputShape
+
+
+class JaxEndpoint:
+    def __init__(self, fn_id: str, cfg: ModelConfig, seed: int = 0,
+                 serve_seq: int = 64, serve_batch: int = 2,
+                 decode_steps: int = 4):
+        self.fn_id = fn_id
+        self.cfg = cfg
+        self.model = build_model(cfg)
+        self.serve_shape = InputShape("serve", serve_seq, serve_batch,
+                                      "prefill")
+        self.decode_steps = decode_steps
+        self.plan = decode_cache_plan(cfg, serve_seq)
+        rng = jax.random.PRNGKey(seed)
+        # host weights: numpy (host RAM)
+        params = self.model.init_params(rng)
+        self.host_params = jax.tree.map(np.asarray, params)
+        self.weight_bytes = sum(x.nbytes for x in jax.tree.leaves(params))
+        self.device_params = None
+        self._compiled: Dict[str, Any] = {}
+        self.lock = threading.Lock()  # one instance: serialize executions
+        self.last_use = 0.0
+
+    # -- residency ---------------------------------------------------------
+    @property
+    def resident(self) -> bool:
+        return self.device_params is not None
+
+    def upload(self) -> float:
+        t0 = time.monotonic()
+        self.device_params = jax.tree.map(jnp.asarray, self.host_params)
+        jax.block_until_ready(self.device_params)
+        return time.monotonic() - t0
+
+    def evict(self) -> None:
+        self.device_params = None
+
+    # -- compilation (the "container init" analogue) -------------------------
+    def compile(self) -> float:
+        t0 = time.monotonic()
+        plan = self.plan
+        model = self.model
+
+        def _prefill(params, batch):
+            if plan.kind == "state":
+                return model.prefill_fn(params, batch)
+            return model.prefill_fn(params, batch, cache_len=plan.length,
+                                    ring=plan.ring)
+
+        def _decode(params, cache, tok, pos):
+            return model.decode_fn(params, cache, tok, pos, ring=plan.ring)
+
+        compiled = {"prefill": jax.jit(_prefill), "decode": jax.jit(_decode)}
+        # trigger compilation with abstract-matching dummy batch
+        batch = self.model.make_batch(self.serve_shape)
+        if self.device_params is None:
+            self.upload()
+        logits, cache = compiled["prefill"](self.device_params, batch)
+        tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+        pos = batch["tokens"].shape[1] + (
+            self.cfg.n_patches if self.cfg.family == "vlm" else 0)
+        compiled["decode"](self.device_params, cache, tok, pos)
+        jax.block_until_ready(logits)
+        self._compiled = compiled  # publish atomically: compiled only when usable
+        return time.monotonic() - t0
+
+    @property
+    def compiled(self) -> bool:
+        return bool(self._compiled)
+
+    # -- serving -----------------------------------------------------------
+    def execute(self, request: Optional[dict] = None) -> Dict[str, float]:
+        """One batched request: prefill + a few decode steps."""
+        assert self.resident and self.compiled
+        t0 = time.monotonic()
+        batch = self.model.make_batch(
+            self.serve_shape,
+            rng=jax.random.PRNGKey((request or {}).get("seed", 0)))
+        logits, cache = self._compiled["prefill"](self.device_params, batch)
+        pos = batch["tokens"].shape[1] + (
+            self.cfg.n_patches if self.cfg.family == "vlm" else 0)
+        tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+        toks = []
+        for i in range(self.decode_steps):
+            logits, cache = self._compiled["decode"](
+                self.device_params, cache, tok, pos + i)
+            tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+            toks.append(np.asarray(tok))
+        jax.block_until_ready(logits)
+        return {"exec_s": time.monotonic() - t0,
+                "tokens": np.concatenate(toks, axis=1)}

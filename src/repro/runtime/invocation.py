@@ -1,0 +1,34 @@
+"""Invocation records with full latency breakdown."""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional
+
+
+@dataclass
+class Invocation:
+    fn_id: str
+    arrival: float
+    inv_id: int = 0
+    # filled over the lifecycle
+    dispatch_time: Optional[float] = None
+    exec_start: Optional[float] = None   # after cold-start / upload overhead
+    completion: Optional[float] = None
+    start_type: str = ""                 # warm | host_warm | cold
+    overhead: float = 0.0                # cold start + memory wait
+    service_time: float = 0.0            # device execution time
+    device_id: int = 0
+
+    @property
+    def latency(self) -> float:
+        assert self.completion is not None
+        return self.completion - self.arrival
+
+    @property
+    def queue_time(self) -> float:
+        assert self.dispatch_time is not None
+        return self.dispatch_time - self.arrival
+
+    @property
+    def done(self) -> bool:
+        return self.completion is not None

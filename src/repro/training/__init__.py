@@ -1,0 +1,3 @@
+from repro.training.optimizer import AdamWConfig, adamw_init, adamw_update
+from repro.training.data import DataConfig, MarkovLM, batches
+from repro.training.trainer import Trainer, make_train_step

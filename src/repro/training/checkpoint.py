@@ -1,0 +1,43 @@
+"""Pytree checkpointing to .npz (flat keypath -> array)."""
+from __future__ import annotations
+
+import os
+from typing import Any, Dict, Tuple
+
+import jax
+import numpy as np
+
+SEP = "::"
+
+
+def _flatten(tree) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = SEP.join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def save(path: str, tree, step: int = 0) -> None:
+    tmp = path + ".tmp"
+    flat = _flatten(tree)
+    flat["__step__"] = np.asarray(step)
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    np.savez(tmp, **flat)
+    os.replace(tmp + ".npz" if not tmp.endswith(".npz") else tmp, path)
+
+
+def restore(path: str, template) -> Tuple[Any, int]:
+    """Restore into the structure of ``template`` (shapes must match)."""
+    data = np.load(path)
+    step = int(data["__step__"]) if "__step__" in data else 0
+    paths, treedef = jax.tree_util.tree_flatten_with_path(template)
+    leaves = []
+    for path_k, leaf in paths:
+        key = SEP.join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path_k)
+        arr = data[key]
+        assert arr.shape == leaf.shape, (key, arr.shape, leaf.shape)
+        leaves.append(arr.astype(leaf.dtype))
+    return jax.tree_util.tree_unflatten(treedef, leaves), step

@@ -1,0 +1,2 @@
+from repro.workloads.spec import FunctionSpec, PAPER_FUNCTIONS, function_copies, DEFAULT_MIX
+from repro.workloads.traces import TraceEvent, zipf_trace, azure_trace, make_workload

@@ -1,0 +1,66 @@
+"""Roofline-based service-time cost model for model endpoints.
+
+Turns each assigned (architecture x input shape) into a ``FunctionSpec``
+the scheduler can serve: service time = max(compute, memory) + collective
+roofline terms on the target slice, cold init = compile + weight upload,
+memory footprint = resident parameter bytes (+ cache). This is how the
+paper's "functions" become the assigned architectures in this repro
+(DESIGN.md §4).
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional
+
+from repro.analysis.flops import (HBM_BW, ICI_BW, PEAK_FLOPS, CostTerms,
+                                  roofline_terms, step_cost)
+from repro.configs import ARCH_IDS, get_config
+from repro.shapes import INPUT_SHAPES, InputShape, get_shape
+from repro.workloads.spec import FunctionSpec
+
+# endpoint-serving slice defaults
+DEFAULT_CHIPS = 4            # a v5e sub-slice per endpoint replica
+COMPILE_TIME = 8.0           # XLA compile on first instantiation (s)
+H2D_BW = 100e9               # host->HBM upload bytes/s
+MFU = 0.45                   # achieved fraction of roofline
+
+
+def service_time(cfg, shape: InputShape, chips: int = DEFAULT_CHIPS,
+                 collective_bytes: float = 0.0) -> float:
+    cost = step_cost(cfg, shape)
+    terms = roofline_terms(cost, chips, collective_bytes)
+    return (max(terms["compute_s"], terms["memory_s"])
+            + terms["collective_s"]) / MFU
+
+
+def endpoint_spec(arch_id: str, shape_name: str,
+                  chips: int = DEFAULT_CHIPS) -> FunctionSpec:
+    cfg = get_config(arch_id)
+    shape = get_shape(shape_name)
+    svc = service_time(cfg, shape, chips)
+    wbytes = cfg.n_params() * (2 if "16" in cfg.param_dtype else 4)
+    upload = wbytes / H2D_BW
+    # demand: fraction of the slice's compute this step occupies
+    cost = step_cost(cfg, shape)
+    demand = min(1.0, cost.flops / (svc * chips * PEAK_FLOPS) + 0.05)
+    return FunctionSpec(
+        fn_id=f"{arch_id}:{shape_name}",
+        warm_time=svc,
+        cold_init=COMPILE_TIME + upload,
+        mem_bytes=int(wbytes),
+        demand=demand,
+        kind="endpoint",
+    )
+
+
+def endpoint_mix(shape_name: str = "decode_32k",
+                 archs: Optional[List[str]] = None
+                 ) -> Dict[str, FunctionSpec]:
+    archs = archs or ARCH_IDS
+    out = {}
+    for a in archs:
+        cfg = get_config(a)
+        if shape_name == "long_500k" and not cfg.supports_long_context:
+            continue
+        s = endpoint_spec(a, shape_name)
+        out[s.fn_id] = s
+    return out

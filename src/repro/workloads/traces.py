@@ -1,0 +1,89 @@
+"""Open-loop trace generation (paper §6 "Setup and Workloads").
+
+Two workload classes:
+  - Zipfian: per-function exponential inter-arrival times, average rates
+    zipf-distributed (parameter 1.5) across functions.
+  - Azure-like: per-function mean IATs sampled from a heavy-tailed
+    lognormal (the Azure FaaS trace is "extremely heavy-tailed"), with
+    Weibull-shaped IATs (CV > 1, bursty). Different trace ids give
+    different mixes/intensities, mirroring the paper's Table 3 samples.
+"""
+from __future__ import annotations
+
+import math
+import random
+from dataclasses import dataclass
+from typing import Dict, List, Tuple
+
+from repro.workloads.spec import DEFAULT_MIX, FunctionSpec, function_copies
+
+
+@dataclass(frozen=True)
+class TraceEvent:
+    time: float
+    fn_id: str
+
+
+def _merge(streams: Dict[str, List[float]]) -> List[TraceEvent]:
+    events = [TraceEvent(t, fn) for fn, ts in streams.items() for t in ts]
+    events.sort(key=lambda e: e.time)
+    return events
+
+
+def zipf_trace(fns: Dict[str, FunctionSpec], duration: float,
+               total_rps: float, zipf_param: float = 1.5,
+               seed: int = 0) -> List[TraceEvent]:
+    """Average arrival rates ~ zipf over functions; exponential IATs."""
+    rng = random.Random(seed)
+    ids = list(fns)
+    weights = [1.0 / (i + 1) ** zipf_param for i in range(len(ids))]
+    wsum = sum(weights)
+    streams: Dict[str, List[float]] = {}
+    for fid, w in zip(ids, weights):
+        rate = total_rps * w / wsum
+        t, ts = 0.0, []
+        while True:
+            t += rng.expovariate(rate)
+            if t >= duration:
+                break
+            ts.append(t)
+        streams[fid] = ts
+    return _merge(streams)
+
+
+def azure_trace(fns: Dict[str, FunctionSpec], duration: float,
+                trace_id: int = 4, scale: float = 1.0) -> List[TraceEvent]:
+    """Heavy-tailed Azure-sample-like trace. ``trace_id`` seeds the mix
+    (the paper's Table 3 uses 9 samples of varying intensity)."""
+    rng = random.Random(1000 + trace_id)
+    # intensity profile per trace id (approximate Table-3 util spread)
+    intensity = [0.55, 0.65, 0.75, 1.0, 1.25, 0.6, 1.35, 0.65, 0.85][
+        trace_id % 9] * scale
+    streams: Dict[str, List[float]] = {}
+    for fid in fns:
+        # mean IAT lognormal: heavy right tail (rare functions); median
+        # calibrated so trace 3 (~intensity 1.0, 19-24 fns) lands around
+        # 70% device utilization at D=2, like the paper's medium trace
+        mean_iat = rng.lognormvariate(math.log(44.0), 1.2) / intensity
+        shape = rng.uniform(0.6, 0.9)  # Weibull shape < 1 -> bursty, CV > 1
+        t, ts = 0.0, []
+        while True:
+            t += rng.weibullvariate(
+                mean_iat / math.gamma(1 + 1 / shape), shape)
+            if t >= duration:
+                break
+            ts.append(t)
+        streams[fid] = ts
+    return _merge(streams)
+
+
+def make_workload(kind: str, n_fns: int = 24, duration: float = 300.0,
+                  total_rps: float = 2.0, trace_id: int = 4, seed: int = 0,
+                  mix: List[str] = DEFAULT_MIX
+                  ) -> Tuple[Dict[str, FunctionSpec], List[TraceEvent]]:
+    fns = function_copies(mix, n_fns)
+    if kind == "zipf":
+        return fns, zipf_trace(fns, duration, total_rps, seed=seed)
+    if kind == "azure":
+        return fns, azure_trace(fns, duration, trace_id=trace_id)
+    raise ValueError(kind)

@@ -1,0 +1,127 @@
+"""Property-based tests (hypothesis) for scheduler + memory invariants."""
+import math
+
+from hypothesis import given, settings, strategies as st
+
+from repro.core.flow import QueueState
+from repro.core.mqfq import MQFQSticky
+from repro.core.policies import make_policy
+from repro.memory.manager import GB, DeviceMemoryManager
+from repro.runtime.simulate import run_sim
+from repro.workloads.spec import FunctionSpec
+from repro.workloads.traces import TraceEvent
+
+
+def mk_fns(taus):
+    return {f"f{i}": FunctionSpec(f"f{i}", warm_time=t, cold_init=0.5,
+                                  mem_bytes=GB, demand=0.4)
+            for i, t in enumerate(taus)}
+
+
+def saturating_trace(n_fns, duration, rate_per_fn):
+    ev = []
+    for i in range(n_fns):
+        t = 0.013 * i
+        while t < duration:
+            ev.append(TraceEvent(t, f"f{i}"))
+            t += 1.0 / rate_per_fn
+    return sorted(ev, key=lambda e: e.time)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    taus=st.lists(st.floats(0.05, 2.0), min_size=2, max_size=5),
+    T=st.floats(0.5, 20.0),
+    d=st.integers(1, 3),
+)
+def test_fairness_bound_eq1(taus, T, d):
+    """Paper Eq. 1: for continuously backlogged flows,
+    |S_i - S_j| <= (D-1)(2T + tau_i - tau_j), with discretization slack
+    (tau tracked by EMA; service quantized to whole invocations)."""
+    fns = mk_fns(taus)
+    # arrival rate high enough that every flow stays backlogged
+    trace = saturating_trace(len(taus), 120.0, rate_per_fn=20.0)
+    pol = MQFQSticky(T=T, alpha=2.0)
+    res = run_sim(pol, fns, trace, d=d, pool_size=64, beta=0.0,
+                  capacity_bytes=64 * GB)
+    tau_max = max(i.service_time for i in res.invocations if i.done)
+    for w in res.fairness.windows:
+        # Eq. 1 is a fluid-model bound; discrete windowed measurement adds
+        # the over-run budget (2T) and whole-invocation quantization (2tau).
+        slack = 2.0 * T + 2.0 * tau_max + 1e-6
+        bound = max(w.bound, 0.0) + slack
+        assert w.max_gap <= bound + 1e-6, (
+            f"gap {w.max_gap} > bound {w.bound} + slack {slack} "
+            f"(T={T}, D={d}, taus={taus})")
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    taus=st.lists(st.floats(0.05, 1.5), min_size=2, max_size=4),
+    T=st.floats(0.5, 10.0),
+    seed=st.integers(0, 5),
+)
+def test_vt_monotone_and_conservation(taus, T, seed):
+    fns = mk_fns(taus)
+    trace = saturating_trace(len(taus), 60.0, rate_per_fn=10.0)
+    pol = MQFQSticky(T=T, seed=seed)
+
+    vt_seen = {}
+    orig_dispatch = pol.on_dispatch
+
+    def spy(q, inv, now):
+        prev = vt_seen.get(q.fn_id, -math.inf)
+        orig_dispatch(q, inv, now)
+        assert q.vt >= prev, "VT must be monotone per queue"
+        # eligibility invariant: dispatched queue satisfied Alg.1 line 6
+        assert q.vt - q.tau / q.weight <= pol.global_vt + T + 1e-9
+        vt_seen[q.fn_id] = q.vt
+
+    pol.on_dispatch = spy
+    res = run_sim(pol, fns, trace, d=2, pool_size=64, beta=0.0,
+                  capacity_bytes=64 * GB)
+    done = [i for i in res.invocations if i.done]
+    assert len(done) == len(res.invocations), "work conservation: all done"
+    for inv in done:
+        assert inv.completion >= inv.dispatch_time >= inv.arrival
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    sizes=st.lists(st.integers(1, 6), min_size=2, max_size=8),
+    capacity=st.integers(8, 24),
+    policy=st.sampled_from(["ondemand", "madvise", "prefetch",
+                            "prefetch_swap"]),
+)
+def test_memory_capacity_invariant(sizes, capacity, policy):
+    """Resident bytes never exceed capacity under any op sequence."""
+    mgr = DeviceMemoryManager(capacity_bytes=capacity * GB,
+                              h2d_bw=10 * GB, policy=policy)
+    t = 0.0
+    for rep in range(3):
+        for i, s in enumerate(sizes):
+            t += 1.0
+            mgr.on_queue_active(f"f{i}", s * GB, t)
+            assert mgr.used <= mgr.capacity or policy == "prefetch", \
+                (mgr.used, mgr.capacity)
+            ready, mult = mgr.acquire(f"f{i}", s * GB, t)
+            assert ready >= t
+            assert mult >= 1.0
+            if i % 2 == rep % 2:
+                mgr.on_queue_idle(f"f{i}", t)
+    # ondemand/madvise/prefetch_swap must respect the hard capacity
+    if policy != "prefetch":
+        assert mgr.used <= mgr.capacity
+
+
+@settings(max_examples=10, deadline=None)
+@given(policy=st.sampled_from(["fcfs", "batch", "sjf", "eevdf",
+                               "mqfq", "mqfq-sticky"]),
+       d=st.integers(1, 3))
+def test_all_policies_complete_everything(policy, d):
+    fns = mk_fns([0.1, 0.5, 1.0])
+    trace = saturating_trace(3, 30.0, rate_per_fn=3.0)
+    pol = make_policy(policy)
+    res = run_sim(pol, fns, trace, d=d, pool_size=8)
+    assert all(i.done for i in res.invocations)
+    assert all(i.latency >= 0 for i in res.invocations)

@@ -1,0 +1,231 @@
+"""Pallas kernel validation: shape/dtype sweeps vs pure-jnp oracles,
+interpret=True (kernel body executes on CPU)."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.kernels.decode_attention.ops import decode_attention
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.mlstm_scan.ops import mlstm_scan
+from repro.kernels.mlstm_scan.ref import mlstm_scan_ref
+from repro.kernels.ssm_scan.ops import ssm_scan
+from repro.kernels.ssm_scan.ref import ssm_scan_ref
+from repro.models import attention as mattn
+
+
+def _tol(dtype):
+    return 2e-2 if dtype == jnp.bfloat16 else 2e-5
+
+
+class TestFlashAttention:
+    @pytest.mark.parametrize("B,S,H,KV,dh", [
+        (2, 256, 4, 2, 64), (1, 128, 4, 4, 32), (2, 192, 8, 2, 128),
+        (1, 96, 3, 1, 64), (1, 64, 2, 2, 256),
+    ])
+    @pytest.mark.parametrize("causal,window", [(True, 0), (True, 48),
+                                               (False, 0)])
+    def test_vs_ref(self, B, S, H, KV, dh, causal, window):
+        ks = jax.random.split(jax.random.PRNGKey(0), 3)
+        q = jax.random.normal(ks[0], (B, S, H, dh), jnp.float32)
+        k = jax.random.normal(ks[1], (B, S, KV, dh), jnp.float32)
+        v = jax.random.normal(ks[2], (B, S, KV, dh), jnp.float32)
+        out = flash_attention(q, k, v, causal=causal, window=window)
+        ref = mattn.masked_attention(q, k, v, jnp.arange(S), jnp.arange(S),
+                                     causal=causal, window=window)
+        assert jnp.max(jnp.abs(out - ref)) < 2e-5
+
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_dtypes(self, dtype):
+        ks = jax.random.split(jax.random.PRNGKey(1), 3)
+        q = jax.random.normal(ks[0], (1, 128, 4, 64)).astype(dtype)
+        k = jax.random.normal(ks[1], (1, 128, 2, 64)).astype(dtype)
+        v = jax.random.normal(ks[2], (1, 128, 2, 64)).astype(dtype)
+        out = flash_attention(q, k, v)
+        ref = mattn.masked_attention(q, k, v, jnp.arange(128),
+                                     jnp.arange(128), causal=True)
+        assert out.dtype == dtype
+        assert jnp.max(jnp.abs(out.astype(jnp.float32)
+                               - ref.astype(jnp.float32))) < _tol(dtype)
+
+    def test_nonaligned_block_padding(self):
+        """Sq not a multiple of the block size exercises the pad path."""
+        ks = jax.random.split(jax.random.PRNGKey(2), 3)
+        q = jax.random.normal(ks[0], (1, 200, 2, 64))
+        k = jax.random.normal(ks[1], (1, 200, 2, 64))
+        v = jax.random.normal(ks[2], (1, 200, 2, 64))
+        out = flash_attention(q, k, v, causal=True)
+        ref = mattn.masked_attention(q, k, v, jnp.arange(200),
+                                     jnp.arange(200), causal=True)
+        assert jnp.max(jnp.abs(out - ref)) < 2e-5
+
+
+class TestDecodeAttention:
+    @pytest.mark.parametrize("B,S,H,KV,dh,window,ring,pos", [
+        (2, 256, 4, 2, 64, 0, False, 100),
+        (1, 128, 8, 8, 32, 0, False, 127),
+        (2, 64, 4, 1, 64, 48, True, 200),
+        (1, 512, 6, 2, 128, 0, False, 5),
+        (1, 96, 5, 5, 64, 32, True, 96),
+    ])
+    def test_vs_model_ref(self, B, S, H, KV, dh, window, ring, pos):
+        ks = jax.random.split(jax.random.PRNGKey(3), 3)
+        q = jax.random.normal(ks[0], (B, 1, H, dh), jnp.float32)
+        ck = jax.random.normal(ks[1], (B, S, KV, dh), jnp.float32)
+        cv = jax.random.normal(ks[2], (B, S, KV, dh), jnp.float32)
+        out = decode_attention(q, ck, cv, pos, window=window, ring=ring)
+        ref = mattn.decode_attention(q, ck, cv, pos, window=window,
+                                     ring=ring)
+        assert jnp.max(jnp.abs(out - ref)) < 2e-5
+
+
+class TestMlstmScan:
+    @pytest.mark.parametrize("B,S,H,dh,chunk", [
+        (2, 128, 2, 64, 32), (1, 100, 4, 32, 64), (1, 64, 1, 128, 64),
+    ])
+    def test_vs_ref(self, B, S, H, dh, chunk):
+        ks = jax.random.split(jax.random.PRNGKey(4), 5)
+        q, k, v = (jax.random.normal(ks[i], (B, S, H, dh))
+                   for i in range(3))
+        ig = jax.random.normal(ks[3], (B, S, H))
+        fg = jax.random.normal(ks[4], (B, S, H)) + 2.0
+        out = mlstm_scan(q, k, v, ig, fg, chunk=chunk)
+        fold = lambda a: a.transpose(0, 2, 1, 3).reshape(B * H, S, -1)
+        g = lambda a: a.transpose(0, 2, 1).reshape(B * H, S, 1)
+        ref = mlstm_scan_ref(fold(q), fold(k), fold(v), g(ig), g(fg))
+        ref = ref.reshape(B, H, S, dh).transpose(0, 2, 1, 3)
+        assert jnp.max(jnp.abs(out - ref)) < 1e-4
+
+    def test_matches_model_block_state(self):
+        """Kernel output equals the model's time-scan (same math as
+        models.xlstm mLSTM recurrence)."""
+        from repro.kernels.mlstm_scan.ref import mlstm_scan_ref
+        B, S, dh = 1, 48, 32
+        ks = jax.random.split(jax.random.PRNGKey(5), 5)
+        q, k, v = (jax.random.normal(ks[i], (B, S, 1, dh))
+                   for i in range(3))
+        ig = jax.random.normal(ks[3], (B, S, 1))
+        fg = jax.random.normal(ks[4], (B, S, 1))
+        out = mlstm_scan(q, k, v, ig, fg, chunk=16)
+        ref = mlstm_scan_ref(q[:, :, 0], k[:, :, 0], v[:, :, 0], ig, fg)
+        assert jnp.max(jnp.abs(out[:, :, 0] - ref)) < 1e-4
+
+
+class TestSsmScan:
+    @pytest.mark.parametrize("B,S,Hs,P,N", [
+        (2, 96, 2, 32, 16), (1, 64, 4, 64, 8), (1, 50, 1, 16, 16),
+    ])
+    def test_vs_ref(self, B, S, Hs, P, N):
+        ks = jax.random.split(jax.random.PRNGKey(6), 6)
+        x = jax.random.normal(ks[0], (B, S, Hs, P))
+        dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, Hs)))
+        a_log = jax.random.normal(ks[2], (Hs,)) * 0.3
+        b = jax.random.normal(ks[3], (B, S, N))
+        c = jax.random.normal(ks[4], (B, S, N))
+        d_skip = jax.random.normal(ks[5], (Hs,))
+        out = ssm_scan(x, dt, a_log, b, c, d_skip)
+        A = -jnp.exp(a_log)
+        decay = jnp.exp(dt * A)
+        fold = lambda a: a.transpose(0, 2, 1, 3).reshape(B * Hs, S, -1)
+        g = lambda a: a.transpose(0, 2, 1).reshape(B * Hs, S, 1)
+        bb = jnp.broadcast_to(b[:, None], (B, Hs, S, N)).reshape(
+            B * Hs, S, N)
+        cc = jnp.broadcast_to(c[:, None], (B, Hs, S, N)).reshape(
+            B * Hs, S, N)
+        ref = ssm_scan_ref(fold(x), g(decay), g(dt), bb, cc)
+        ref = ref.reshape(B, Hs, S, P).transpose(0, 2, 1, 3)
+        ref = ref + d_skip[None, None, :, None] * x
+        assert jnp.max(jnp.abs(out - ref)) < 1e-4
+
+
+# --- int8 KV quantization properties (§Perf H5) --------------------------------
+
+from hypothesis import given, settings, strategies as st
+
+
+class TestKVQuantProperties:
+    @settings(max_examples=25, deadline=None)
+    @given(b=st.integers(1, 3), s=st.integers(1, 9), kv=st.integers(1, 4),
+           dh=st.sampled_from([8, 64, 128]),
+           scale_pow=st.integers(-8, 8), seed=st.integers(0, 2**31 - 1))
+    def test_roundtrip_error_bound(self, b, s, kv, dh, scale_pow, seed):
+        """|dequant(quant(x)) - x| <= amax/253 elementwise (symmetric int8
+        with per-(b,s,kv) scales), across 16 orders of magnitude."""
+        import jax, jax.numpy as jnp
+        from repro.models.attention import dequantize_kv, quantize_kv
+        x = jax.random.normal(jax.random.PRNGKey(seed), (b, s, kv, dh),
+                              jnp.float32) * (10.0 ** scale_pow)
+        q, sc = quantize_kv(x)
+        assert q.dtype == jnp.int8
+        xr = dequantize_kv(q, sc, jnp.float32)
+        amax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
+        bound = jnp.maximum(amax, 1e-8) / 253.0 + 1e-12
+        assert bool(jnp.all(jnp.abs(xr - x) <= bound * 1.001))
+
+    def test_quantize_preserves_argmax_direction(self):
+        """The per-group max element keeps its sign and dominance."""
+        import jax, jax.numpy as jnp
+        from repro.models.attention import dequantize_kv, quantize_kv
+        x = jax.random.normal(jax.random.PRNGKey(3), (2, 4, 2, 64),
+                              jnp.float32)
+        q, sc = quantize_kv(x)
+        xr = dequantize_kv(q, sc, jnp.float32)
+        assert bool(jnp.all(jnp.argmax(jnp.abs(x), -1)
+                            == jnp.argmax(jnp.abs(xr), -1)))
+
+
+class TestDecodeAttentionQuant:
+    """int8-cache flash-decoding kernel vs its dequantize-then-attend
+    oracle, and end-to-end vs the full-precision model reference."""
+
+    @pytest.mark.parametrize("B,S,H,KV,dh,window,ring,pos", [
+        (2, 256, 4, 2, 64, 0, False, 100),
+        (1, 128, 8, 8, 32, 0, False, 127),
+        (2, 64, 4, 1, 64, 48, True, 200),
+        (1, 512, 6, 2, 128, 0, False, 5),
+        (1, 96, 5, 5, 64, 32, True, 96),
+    ])
+    def test_vs_q8_oracle(self, B, S, H, KV, dh, window, ring, pos):
+        from repro.kernels.decode_attention.ops import decode_attention_quant
+        from repro.kernels.decode_attention.ref import decode_attention_q8_ref
+        from repro.models.attention import (quantize_kv,
+                                            ring_slot_positions)
+        ks = jax.random.split(jax.random.PRNGKey(7), 3)
+        q = jax.random.normal(ks[0], (B, 1, H, dh), jnp.float32)
+        ckf = jax.random.normal(ks[1], (B, S, KV, dh), jnp.float32)
+        cvf = jax.random.normal(ks[2], (B, S, KV, dh), jnp.float32)
+        ck, cks = quantize_kv(ckf)
+        cv, cvs = quantize_kv(cvf)
+        out = decode_attention_quant(q, ck, cks, cv, cvs, pos,
+                                     window=window, ring=ring)
+        # oracle in (BH, S) layout
+        G = H // KV
+        qg = q.reshape(B, KV, G, dh).reshape(B * KV, G, dh)
+        kg = ck.transpose(0, 2, 1, 3).reshape(B * KV, S, dh)
+        vg = cv.transpose(0, 2, 1, 3).reshape(B * KV, S, dh)
+        ksg = cks.transpose(0, 2, 1).reshape(B * KV, S)
+        vsg = cvs.transpose(0, 2, 1).reshape(B * KV, S)
+        if ring:
+            slot_pos = ring_slot_positions(pos + 1, S)
+        else:
+            slot_pos = jnp.where(jnp.arange(S) <= pos, jnp.arange(S), -1)
+        ref = decode_attention_q8_ref(qg, kg, ksg, vg, vsg, pos, slot_pos,
+                                      window=window)
+        ref = ref.reshape(B, KV, G, dh).reshape(B, 1, H, dh)
+        assert jnp.max(jnp.abs(out - ref)) < 2e-5
+
+    def test_close_to_full_precision(self):
+        """Quantization error end-to-end stays small on unit-scale data."""
+        from repro.kernels.decode_attention.ops import decode_attention_quant
+        from repro.models.attention import quantize_kv
+        import repro.models.attention as mattn
+        ks = jax.random.split(jax.random.PRNGKey(11), 3)
+        B, S, H, KV, dh, pos = 2, 256, 8, 4, 64, 200
+        q = jax.random.normal(ks[0], (B, 1, H, dh), jnp.float32)
+        ckf = jax.random.normal(ks[1], (B, S, KV, dh), jnp.float32)
+        cvf = jax.random.normal(ks[2], (B, S, KV, dh), jnp.float32)
+        ck, cks = quantize_kv(ckf)
+        cv, cvs = quantize_kv(cvf)
+        out = decode_attention_quant(q, ck, cks, cv, cvs, pos)
+        ref = mattn.decode_attention(q, ckf, cvf, pos)
+        assert jnp.max(jnp.abs(out - ref)) < 0.05

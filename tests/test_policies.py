@@ -1,0 +1,78 @@
+"""Baseline queueing policies (paper §6 comparison set)."""
+from repro.core.policies import EEVDF, FCFS, SJF, Batch, make_policy
+from repro.runtime.invocation import Invocation
+
+
+def arrive(pol, fn, t):
+    inv = Invocation(fn, t)
+    pol.on_arrival(inv, t)
+    return inv
+
+
+def drain(pol, now=100.0):
+    order = []
+    while True:
+        q = pol.choose(now)
+        if q is None:
+            return order
+        inv = q.pop()
+        pol.on_dispatch(q, inv, now)
+        order.append(inv)
+        inv.service_time = q.tau
+        pol.on_complete(q, inv, now)
+
+
+def test_fcfs_arrival_order():
+    pol = FCFS()
+    a = arrive(pol, "x", 0.0)
+    b = arrive(pol, "y", 1.0)
+    c = arrive(pol, "x", 2.0)
+    assert [i.arrival for i in drain(pol)] == [0.0, 1.0, 2.0]
+    assert drain(pol) == []
+
+
+def test_batch_drains_whole_queue():
+    pol = Batch()
+    arrive(pol, "a", 0.0)
+    arrive(pol, "b", 0.5)
+    arrive(pol, "a", 1.0)
+    arrive(pol, "a", 2.0)
+    order = [i.fn_id for i in drain(pol)]
+    # queue 'a' holds the oldest item and is drained fully before 'b'
+    assert order == ["a", "a", "a", "b"]
+
+
+def test_sjf_picks_shortest_expected():
+    pol = SJF()
+    arrive(pol, "long", 0.0)
+    arrive(pol, "short", 1.0)
+    pol.get_queue("long").tau = 10.0
+    pol.get_queue("short").tau = 0.1
+    assert pol.choose(2.0).fn_id == "short"
+
+
+def test_sjf_head_of_line_risk():
+    """Long functions starve while short work exists (paper §6.2)."""
+    pol = SJF()
+    arrive(pol, "long", 0.0)
+    pol.get_queue("long").tau = 10.0
+    for t in range(5):
+        arrive(pol, "short", float(t))
+    pol.get_queue("short").tau = 0.1
+    for _ in range(5):
+        assert pol.choose(10.0).fn_id == "short"
+        pol.get_queue("short").pop()
+
+
+def test_eevdf_deadline_order():
+    pol = EEVDF()
+    arrive(pol, "early_long", 0.0)
+    arrive(pol, "late_short", 3.0)
+    pol.get_queue("early_long").tau = 10.0  # deadline 10
+    pol.get_queue("late_short").tau = 1.0   # deadline 4
+    assert pol.choose(5.0).fn_id == "late_short"
+
+
+def test_make_policy_registry():
+    for name in ["fcfs", "batch", "sjf", "eevdf", "mqfq", "mqfq-sticky"]:
+        assert make_policy(name).name == name
