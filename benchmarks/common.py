@@ -1,4 +1,5 @@
-"""Shared benchmark utilities: CSV emission + result persistence."""
+"""Shared benchmark utilities: CSV emission + result persistence, plus
+the one-call bridge into the unified ``repro.server`` control plane."""
 from __future__ import annotations
 
 import csv
@@ -7,6 +8,23 @@ import time
 from typing import Dict, List
 
 RESULTS_DIR = os.environ.get("REPRO_RESULTS", "results/bench")
+
+
+def simulate(policy, fns, trace, **server_kw):
+    """Replay ``trace`` through the unified control plane's sim executor.
+
+    ``policy`` is a name ("mqfq-sticky") or a pre-built Policy instance
+    (custom/ablation policies); remaining kwargs are ``ServerConfig``
+    fields (d, n_devices, mem_policy, capacity_bytes, h2d_bw, pool_size,
+    beta, dynamic_d, ...). Returns a ``repro.server.RunResult``.
+    """
+    from repro.core.policies import make_policy
+    from repro.server import ServerConfig, make_server
+
+    if isinstance(policy, str):
+        policy = make_policy(policy, **server_kw.pop("policy_kwargs", {}))
+    cfg = ServerConfig(**server_kw)
+    return make_server(cfg, fns=fns, policy=policy).run_trace(trace)
 
 
 class Bench:

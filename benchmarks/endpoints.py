@@ -4,10 +4,9 @@ weight residency in HBM). The paper's Table-1 functions become model
 endpoints; the same fairness/locality story must hold."""
 from __future__ import annotations
 
-from benchmarks.common import Bench
+from benchmarks.common import Bench, simulate
 from repro.core.policies import make_policy
 from repro.memory.manager import GB
-from repro.runtime.simulate import run_sim
 from repro.workloads.costmodel import endpoint_mix
 from repro.workloads.traces import zipf_trace
 
@@ -21,7 +20,7 @@ def main() -> Bench:
         duration = 400.0 / rps    # ~400 events regardless of service scale
         trace = zipf_trace(fns, duration=duration, total_rps=rps, seed=3)
         for pname in ["fcfs", "sjf", "mqfq-sticky"]:
-            res = run_sim(make_policy(pname), fns, trace, d=2,
+            res = simulate(make_policy(pname), fns, trace, d=2,
                           capacity_bytes=128 * GB, h2d_bw=100 * GB,
                           pool_size=8)
             b.add(shape=shape, policy=pname,

@@ -7,10 +7,9 @@ ideal while OnDemand pays ~paging and Madvise pays directives for
 nothing."""
 from __future__ import annotations
 
-from benchmarks.common import Bench
+from benchmarks.common import Bench, simulate
 from repro.core.policies import make_policy
 from repro.memory.manager import GB
-from repro.runtime.simulate import run_sim
 from repro.workloads.spec import PAPER_FUNCTIONS
 from repro.workloads.traces import TraceEvent
 
@@ -35,7 +34,7 @@ def main() -> Bench:
     fns, trace = _workload()
     ideal = PAPER_FUNCTIONS["fft"].warm_time
     for policy in ["ondemand", "madvise", "prefetch", "prefetch_swap"]:
-        res = run_sim(make_policy("mqfq-sticky"), fns, trace, d=2,
+        res = simulate(make_policy("mqfq-sticky"), fns, trace, d=2,
                       mem_policy=policy, capacity_bytes=16 * GB,
                       h2d_bw=12 * GB, pool_size=32)
         warm = [i for i in res.invocations if i.start_type != "cold"]

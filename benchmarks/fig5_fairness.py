@@ -3,10 +3,9 @@ service gap vs the Eq. 1 theoretical bound, (c) end-to-end latency vs
 offered load (FCFS vs MQFQ-Sticky), Zipfian workload class."""
 from __future__ import annotations
 
-from benchmarks.common import Bench
+from benchmarks.common import Bench, simulate
 from repro.core.policies import make_policy
 from repro.memory.manager import GB
-from repro.runtime.simulate import run_sim
 from repro.workloads.spec import DEFAULT_MIX, PAPER_FUNCTIONS, \
     function_copies
 from repro.workloads.traces import TraceEvent, zipf_trace
@@ -30,7 +29,7 @@ def fig5a(b: Bench) -> None:
             t += 1.0
     trace.sort(key=lambda e: e.time)
     for pname in ["fcfs", "mqfq-sticky"]:
-        res = run_sim(make_policy(pname), fns, trace, d=1)
+        res = simulate(make_policy(pname), fns, trace, d=1)
         for (t0, t1) in [(200, 230), (400, 430), (500, 530)]:
             svc = res.service_time_by_fn(t0, t1)
             low = sum(svc.get(f"cupy-{i}", 0.0) for i in (0, 1)) / 2
@@ -45,7 +44,7 @@ def fig5b(b: Bench) -> None:
     fns = function_copies(DEFAULT_MIX, 24)
     trace = zipf_trace(fns, duration=600.0, total_rps=1.6, seed=1)
     pol = make_policy("mqfq-sticky", T=10.0)
-    res = run_sim(pol, fns, trace, d=2, h2d_bw=12 * GB)
+    res = simulate(pol, fns, trace, d=2, h2d_bw=12 * GB)
     gaps = [w.max_gap for w in res.fairness.windows]
     bounds = [w.bound for w in res.fairness.windows]
     if gaps:
@@ -64,7 +63,7 @@ def fig5c(b: Bench) -> None:
         trace = zipf_trace(fns, duration=400.0, total_rps=rps, seed=2)
         lat = {}
         for pname in ["fcfs", "mqfq-sticky"]:
-            res = run_sim(make_policy(pname), fns, trace, d=2,
+            res = simulate(make_policy(pname), fns, trace, d=2,
                           pool_size=16, h2d_bw=12 * GB)
             lat[pname] = res.mean_latency()
         b.add(panel="5c", rps=rps,

@@ -6,10 +6,9 @@ from __future__ import annotations
 
 import statistics
 
-from benchmarks.common import Bench
+from benchmarks.common import Bench, simulate
 from repro.core.policies import make_policy
 from repro.memory.manager import GB
-from repro.runtime.simulate import run_sim
 from repro.workloads.traces import make_workload
 
 
@@ -20,7 +19,7 @@ def main() -> Bench:
     for d in (1, 2, 3):
         for pname in ["fcfs", "batch", "sjf", "eevdf", "mqfq",
                       "mqfq-sticky"]:
-            res = run_sim(make_policy(pname), fns, trace, d=d,
+            res = simulate(make_policy(pname), fns, trace, d=d,
                           pool_size=32, h2d_bw=12 * GB)
             per_fn = list(res.per_fn_mean().values())
             intra = res.intra_fn_variance()
@@ -34,7 +33,7 @@ def main() -> Bench:
                   cold_pct=round(res.pool.cold_hit_pct, 1),
                   utilization=round(res.mean_utilization(), 3))
     # FCFS-Naive: no warm pool (size 0 -> every start cold), no prefetch
-    res = run_sim(make_policy("fcfs"), fns, trace, d=2, pool_size=1,
+    res = simulate(make_policy("fcfs"), fns, trace, d=2, pool_size=1,
                   mem_policy="ondemand", h2d_bw=12 * GB)
     b.add(panel="6a", D=2, policy="fcfs-naive",
           mean_latency_s=round(res.mean_latency(), 2),

@@ -6,9 +6,8 @@ from __future__ import annotations
 
 import dataclasses
 
-from benchmarks.common import Bench
+from benchmarks.common import Bench, simulate
 from repro.core.policies import make_policy
-from repro.runtime.simulate import run_sim
 from repro.workloads.traces import make_workload
 
 
@@ -18,7 +17,7 @@ def main() -> Bench:
                                trace_id=6)  # high-load trace
     for n_dev in (1, 2):
         for d in (1, 2, 3):
-            res = run_sim(make_policy("mqfq-sticky"), fns, trace,
+            res = simulate(make_policy("mqfq-sticky"), fns, trace,
                           n_devices=n_dev, d=d)
             b.add(panel="7c", devices=n_dev, D=d,
                   mean_latency_s=round(res.mean_latency(), 2),
@@ -30,9 +29,9 @@ def main() -> Bench:
     # functions don't account for the smaller slice)
     slow = {fid: dataclasses.replace(s, warm_time=s.warm_time * 1.7)
             for fid, s in fns.items()}
-    full = run_sim(make_policy("mqfq-sticky"), fns, trace, n_devices=1,
+    full = simulate(make_policy("mqfq-sticky"), fns, trace, n_devices=1,
                    d=2)
-    mig = run_sim(make_policy("mqfq-sticky"), slow, trace, n_devices=2,
+    mig = simulate(make_policy("mqfq-sticky"), slow, trace, n_devices=2,
                   d=1)
     b.add(panel="7a", devices="1 full GPU", D=2,
           mean_latency_s=round(full.mean_latency(), 2),

@@ -6,11 +6,10 @@
 """
 from __future__ import annotations
 
-from benchmarks.common import Bench
+from benchmarks.common import Bench, simulate
 from repro.core.mqfq import MQFQSticky
 from repro.core.policies import make_policy
 from repro.memory.manager import GB
-from repro.runtime.simulate import run_sim
 from repro.workloads.traces import make_workload
 
 
@@ -23,7 +22,7 @@ def main() -> Bench:
     for vt_by_service in (True, False):
         for T in (0.0, 1.0, 5.0, 10.0, 20.0, 50.0):
             pol = MQFQSticky(T=T, vt_by_service=vt_by_service)
-            res = run_sim(pol, fns, trace, d=2, h2d_bw=12 * GB)
+            res = simulate(pol, fns, trace, d=2, h2d_bw=12 * GB)
             b.add(panel="8a", T=T,
                   vt_update="wall_time" if vt_by_service else "unit_1.0",
                   mean_latency_s=round(res.mean_latency(), 2),
@@ -32,7 +31,7 @@ def main() -> Bench:
     # (b) anticipatory TTL alpha sweep
     for alpha in (0.0, 0.1, 0.5, 1.0, 2.0, 3.0, 6.0):
         pol = MQFQSticky(T=10.0, alpha=alpha)
-        res = run_sim(pol, fns, trace, d=2, h2d_bw=12 * GB)
+        res = simulate(pol, fns, trace, d=2, h2d_bw=12 * GB)
         warm = [i for i in res.invocations if i.start_type == "warm"]
         b.add(panel="8b", alpha=alpha, ttl="per_fn_iat",
               mean_latency_s=round(res.mean_latency(), 2),
@@ -45,7 +44,7 @@ def main() -> Bench:
             def _update_state(self, q, now):
                 q.iat = q_iat  # force a single global TTL
                 super()._update_state(q, now)
-        res = run_sim(_Fixed(T=10.0, alpha=2.0), fns, trace, d=2, h2d_bw=12 * GB)
+        res = simulate(_Fixed(T=10.0, alpha=2.0), fns, trace, d=2, h2d_bw=12 * GB)
         b.add(panel="8b", alpha=2.0, ttl="fixed_global",
               mean_latency_s=round(res.mean_latency(), 2),
               warm_pct="", cold_pct=round(res.pool.cold_hit_pct, 1))
@@ -53,7 +52,7 @@ def main() -> Bench:
     # (c) pool-size miss-rate curves
     for pool in (4, 8, 16, 32, 64):
         for pname in ["mqfq-sticky", "fcfs"]:
-            res = run_sim(make_policy(pname), fns, trace, d=2,
+            res = simulate(make_policy(pname), fns, trace, d=2,
                           pool_size=pool, h2d_bw=12 * GB)
             b.add(panel="8c", pool_size=pool, policy=pname,
                   cold_pct=round(res.pool.cold_hit_pct, 1),
@@ -62,7 +61,7 @@ def main() -> Bench:
     # preferential dispatch ablation (sticky vs plain MQFQ)
     for sticky in (True, False):
         pol = MQFQSticky(T=10.0, sticky=sticky)
-        res = run_sim(pol, fns, trace, d=2, h2d_bw=12 * GB)
+        res = simulate(pol, fns, trace, d=2, h2d_bw=12 * GB)
         b.add(panel="sticky_ablation", sticky=sticky,
               mean_latency_s=round(res.mean_latency(), 2),
               cold_pct=round(res.pool.cold_hit_pct, 1))
@@ -73,7 +72,7 @@ def main() -> Bench:
     # unearned service. Report latency + observed fairness gap both ways.
     for deficit in (False, True):
         pol = MQFQSticky(T=10.0, deficit_vt=deficit)
-        res = run_sim(pol, fns, trace, d=2, h2d_bw=12 * GB)
+        res = simulate(pol, fns, trace, d=2, h2d_bw=12 * GB)
         gaps = [w.max_gap for w in res.fairness.windows]
         b.add(panel="deficit_vt", deficit=deficit,
               mean_latency_s=round(res.mean_latency(), 2),

@@ -2,10 +2,9 @@
 columns), reproduced through the simulator's start-type machinery."""
 from __future__ import annotations
 
-from benchmarks.common import Bench
+from benchmarks.common import Bench, simulate
 from repro.core.policies import make_policy
 from repro.memory.manager import GB
-from repro.runtime.simulate import run_sim
 from repro.workloads.spec import PAPER_FUNCTIONS
 from repro.workloads.traces import TraceEvent
 
@@ -16,7 +15,7 @@ def main() -> Bench:
         fns = {fn_id: spec}
         # two invocations, far apart: first is cold, second warm
         trace = [TraceEvent(0.0, fn_id), TraceEvent(100.0, fn_id)]
-        res = run_sim(make_policy("mqfq-sticky", alpha=1000.0), fns, trace,
+        res = simulate(make_policy("mqfq-sticky", alpha=1000.0), fns, trace,
                       d=1, h2d_bw=12 * GB)
         cold, warm = res.invocations
         b.add(function=fn_id,

@@ -13,8 +13,7 @@ Run:  PYTHONPATH=src python examples/memory_policies.py
 """
 from __future__ import annotations
 
-from repro.core.mqfq import MQFQSticky
-from repro.runtime.simulate import run_sim
+from repro.server import ServerConfig, make_server
 from repro.workloads.spec import PAPER_FUNCTIONS
 from repro.workloads.traces import TraceEvent
 
@@ -37,8 +36,10 @@ def main() -> None:
           f"{'overhead%':>10s}")
     rows = {}
     for pol in ("ondemand", "madvise", "prefetch", "prefetch_swap"):
-        res = run_sim(MQFQSticky(T=10.0, alpha=2.0), fns, trace,
-                      n_devices=1, d=2, mem_policy=pol, pool_size=32)
+        cfg = ServerConfig(policy="mqfq-sticky",
+                           policy_kwargs=dict(T=10.0, alpha=2.0),
+                           n_devices=1, d=2, mem_policy=pol, pool_size=32)
+        res = make_server(cfg, fns=fns).run_trace(trace)
         execs = [i.service_time for i in res.invocations if i.done]
         mean_exec = sum(execs) / len(execs)
         rows[pol] = mean_exec

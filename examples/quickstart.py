@@ -11,8 +11,7 @@ from __future__ import annotations
 
 import json
 
-from repro.core.policies import make_policy
-from repro.runtime.simulate import run_sim
+from repro.server import ServerConfig, make_server
 from repro.workloads.traces import make_workload
 
 
@@ -24,8 +23,9 @@ def part1_policy_comparison() -> None:
                                total_rps=1.5, seed=0)
     for name in ("fcfs", "mqfq-sticky"):
         kw = dict(T=10.0, alpha=2.0) if name == "mqfq-sticky" else {}
-        res = run_sim(make_policy(name, **kw), fns, trace,
-                      n_devices=1, d=2, pool_size=16)
+        cfg = ServerConfig(policy=name, policy_kwargs=kw,
+                           n_devices=1, d=2, pool_size=16)
+        res = make_server(cfg, fns=fns).run_trace(trace)
         print(f"  {name:12s} mean={res.mean_latency():7.2f}s "
               f"p99={res.p99_latency():7.2f}s "
               f"cold%={res.pool.cold_hit_pct:5.1f} "

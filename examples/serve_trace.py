@@ -2,10 +2,12 @@
 with the MQFQ-Sticky control plane (wall-clock, real JAX execution).
 
 Five reduced-config architectures (dense / MoE / SSM / hybrid / VLM) are
-served as black-box "functions" behind the ServingEngine: a dedicated
-dispatcher thread, D-token concurrency control, anticipatory prefetch of
-weights on queue activation, and LRU eviction of idle endpoints — the
-paper's architecture (Fig. 2) end to end.
+served as black-box "functions" behind the unified ``repro.server``
+control plane in wall-clock mode: a dedicated dispatcher thread, D-token
+concurrency control, memory admission, warm-pool container accounting,
+anticipatory prefetch of weights on queue activation and queue-state
+driven LRU eviction of idle endpoints — the paper's architecture
+(Fig. 2) end to end.
 
 Run:  PYTHONPATH=src python examples/serve_trace.py [--requests 30]
 """
@@ -17,9 +19,8 @@ import statistics
 import time
 
 from repro.configs import get_config
-from repro.core.policies import make_policy
 from repro.runtime.device import JaxEndpoint
-from repro.runtime.engine import ServingEngine
+from repro.server import ServerConfig, make_server
 
 ARCHS = ["qwen3-1.7b", "granite-moe-3b-a800m", "xlstm-350m",
          "hymba-1.5b", "llava-next-mistral-7b"]
@@ -27,25 +28,26 @@ ARCHS = ["qwen3-1.7b", "granite-moe-3b-a800m", "xlstm-350m",
 
 def run_policy(policy_name: str, endpoints, trace) -> dict:
     kw = dict(T=10.0, alpha=2.0) if "mqfq" in policy_name else {}
-    engine = ServingEngine(endpoints, make_policy(policy_name, **kw),
-                           d=2, max_resident=3)
-    engine.start()
+    # capacity for ~3 of the 5 endpoints resident at once (the old
+    # engine's max_resident=3), so LRU swapping is actually exercised
+    cap = 3 * max(int(ep.weight_bytes) for ep in endpoints.values())
+    cfg = ServerConfig(executor="wallclock", policy=policy_name,
+                       policy_kwargs=kw, d=2, capacity_bytes=cap)
+    server = make_server(cfg, endpoints=endpoints)
+    server.start()
     t0 = time.monotonic()
     for t_arr, fid, seed in trace:
         dt = t_arr - (time.monotonic() - t0)
         if dt > 0:
             time.sleep(dt)             # open-loop arrivals
-        engine.submit(fid, {"seed": seed})
-    engine.drain(timeout=600)
-    engine.stop()
-    lats = [inv.latency for inv in engine.completed]
-    starts: dict = {}
-    for inv in engine.completed:
-        starts[inv.start_type] = starts.get(inv.start_type, 0) + 1
+        server.submit(fid, {"seed": seed})
+    server.drain(timeout=600)
+    res = server.stop()
+    lats = [inv.latency for inv in res.invocations]
     return {"completed": len(lats),
             "mean_s": statistics.mean(lats) if lats else 0.0,
             "max_s": max(lats, default=0.0),
-            "starts": starts}
+            "starts": res.start_type_counts()}
 
 
 def main() -> None:

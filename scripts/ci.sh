@@ -1,0 +1,15 @@
+#!/usr/bin/env bash
+# CI gate: tier-1 test suite + a smoke benchmark through the unified
+# control-plane API. Run from the repo root.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "== tier-1 tests =="
+python -m pytest -x -q
+
+echo "== smoke: fig6 through repro.server =="
+python -m benchmarks.run --only fig6
+
+echo "CI OK"

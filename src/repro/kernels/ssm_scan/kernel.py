@@ -16,6 +16,10 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# jax renamed TPUCompilerParams -> CompilerParams (>= 0.6); support both
+_CompilerParams = getattr(pltpu, "CompilerParams",
+                          getattr(pltpu, "TPUCompilerParams", None))
+
 
 def _ssm_kernel(x_ref, decay_ref, dt_ref, b_ref, c_ref, y_ref, s_ref, *,
                 chunk: int):
@@ -72,7 +76,7 @@ def ssm_scan_bhspn(x, decay, dt, b, c, *, chunk: int = 64,
         out_specs=spec(P),
         out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
         scratch_shapes=[pltpu.VMEM((P, N), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(x, decay, dt, b, c)

@@ -21,8 +21,7 @@ import time
 
 
 def run_sim_mode(args) -> dict:
-    from repro.core.policies import make_policy
-    from repro.runtime.simulate import run_sim
+    from repro.server import ServerConfig, make_server
     from repro.workloads.costmodel import endpoint_mix
     from repro.workloads.traces import azure_trace, make_workload, zipf_trace
 
@@ -37,10 +36,11 @@ def run_sim_mode(args) -> dict:
     kw = {}
     if args.policy in ("mqfq", "mqfq-sticky"):
         kw = dict(T=args.T, alpha=args.alpha)
-    policy = make_policy(args.policy, **kw)
-    res = run_sim(policy, fns, trace, n_devices=args.devices, d=args.d,
-                  dynamic_d=args.dynamic_d, mem_policy=args.mem_policy,
-                  pool_size=args.pool_size)
+    cfg = ServerConfig(policy=args.policy, policy_kwargs=kw,
+                       n_devices=args.devices, d=args.d,
+                       dynamic_d=args.dynamic_d, mem_policy=args.mem_policy,
+                       pool_size=args.pool_size)
+    res = make_server(cfg, fns=fns).run_trace(trace)
     out = {
         "policy": args.policy, "events": len(trace),
         "mean_latency_s": round(res.mean_latency(), 3),
@@ -55,9 +55,8 @@ def run_sim_mode(args) -> dict:
 
 def run_real_mode(args) -> dict:
     from repro.configs import get_config
-    from repro.core.policies import make_policy
     from repro.runtime.device import JaxEndpoint
-    from repro.runtime.engine import ServingEngine
+    from repro.server import ServerConfig, make_server
 
     import dataclasses
     archs = args.archs.split(",")
@@ -68,24 +67,27 @@ def run_real_mode(args) -> dict:
         for i, a in enumerate(archs)}
     kw = dict(T=args.T, alpha=args.alpha) \
         if args.policy in ("mqfq", "mqfq-sticky") else {}
-    engine = ServingEngine(endpoints, make_policy(args.policy, **kw),
-                           d=args.d)
-    engine.start()
+    # cap residency at roughly half the endpoints (the old engine's
+    # max_resident default) so LRU swapping is actually exercised
+    max_resident = max(2, len(endpoints) // 2)
+    cap = max_resident * max(int(ep.weight_bytes)
+                             for ep in endpoints.values())
+    cfg = ServerConfig(executor="wallclock", policy=args.policy,
+                       policy_kwargs=kw, d=args.d, capacity_bytes=cap)
+    server = make_server(cfg, endpoints=endpoints)
+    server.start()
     rng = random.Random(args.seed)
     for i in range(args.requests):
-        engine.submit(rng.choice(archs), {"seed": i})
+        server.submit(rng.choice(archs), {"seed": i})
         time.sleep(args.think_time)
-    engine.drain(timeout=600)
-    engine.stop()
-    lats = [inv.latency for inv in engine.completed]
-    by_type: dict = {}
-    for inv in engine.completed:
-        by_type[inv.start_type] = by_type.get(inv.start_type, 0) + 1
+    server.drain(timeout=600)
+    res = server.stop()
+    lats = [inv.latency for inv in res.invocations]
     out = {
         "policy": args.policy, "completed": len(lats),
         "mean_latency_s": round(sum(lats) / max(len(lats), 1), 3),
         "max_latency_s": round(max(lats, default=0.0), 3),
-        "start_types": by_type,
+        "start_types": res.start_type_counts(),
     }
     print(json.dumps(out, indent=1))
     return out

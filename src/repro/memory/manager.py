@@ -48,6 +48,9 @@ class DeviceMemoryManager:
         self.h2d_bw = h2d_bw
         self.policy = policy
         self.regions: Dict[str, Region] = {}
+        # notified with fn_id whenever a region is swapped out; the
+        # wall-clock executor mirrors these onto real endpoints
+        self.evict_listeners: List = []
         # accounting
         self.bytes_uploaded = 0
         self.bytes_evicted = 0
@@ -88,9 +91,14 @@ class DeviceMemoryManager:
                 r.resident = False
                 r.upload_eta = -1.0
                 self.bytes_evicted += r.size
+                self._notify_evict(r.fn_id)
                 if self.free_bytes() >= need:
                     return True
         return self.free_bytes() >= need
+
+    def _notify_evict(self, fn_id: str) -> None:
+        for cb in self.evict_listeners:
+            cb(fn_id)
 
     # -- scheduler hooks ------------------------------------------------------
     def on_queue_active(self, fn_id: str, size: int, now: float) -> None:
@@ -120,6 +128,7 @@ class DeviceMemoryManager:
             if r.resident and r.upload_eta <= now:
                 r.resident = False
                 self.bytes_evicted += r.size
+                self._notify_evict(r.fn_id)
 
     # -- dispatch-time ---------------------------------------------------------
     def admit(self, fn_id: str, size: int, running: Dict[str, int],

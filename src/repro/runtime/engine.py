@@ -1,155 +1,60 @@
-"""Wall-clock serving engine: the paper's control plane over real JAX
-execution.
+"""Deprecation shim over ``repro.server`` (the unified control plane).
 
-Single dedicated dispatcher thread (paper §5: "Invocations are dispatched
-by a dedicated thread"), woken on arrivals and completions; executions
-run in a worker pool bounded by the D-token controller. The same Policy /
-WarmPool / residency-accounting code as the simulator.
+The wall-clock serving engine now lives in ``repro.server``:
+``WallClockExecutor`` drives the same ``ControlPlane`` as the simulator
+— gaining multi-device placement, warm-pool container accounting,
+memory admission control and fairness tracking the old ad-hoc engine
+lacked. ``ServingEngine`` remains for existing call sites; new code
+should use::
+
+    from repro.server import ServerConfig, make_server
+    srv = make_server(ServerConfig(executor="wallclock", d=2),
+                      endpoints=endpoints)
 """
 from __future__ import annotations
 
-import queue as queue_mod
-import threading
-import time
-from concurrent.futures import ThreadPoolExecutor
-from dataclasses import dataclass, field
 from typing import Dict, List, Optional
 
-from repro.core.mqfq import MQFQSticky
 from repro.core.policy_base import Policy
-from repro.core.tokens import ConcurrencyController
-from repro.core.flow import QueueState
 from repro.runtime.device import JaxEndpoint
 from repro.runtime.invocation import Invocation
+from repro.server.config import ServerConfig, make_server
 
 
 class ServingEngine:
     def __init__(self, endpoints: Dict[str, JaxEndpoint], policy: Policy,
                  d: int = 2, capacity_bytes: Optional[int] = None,
                  max_resident: Optional[int] = None):
+        if capacity_bytes is None:
+            # legacy knob: "keep at most max_resident endpoints uploaded"
+            # -> a byte budget for the unified memory manager
+            max_resident = max_resident or max(2, len(endpoints) // 2)
+            per_ep = max((int(ep.weight_bytes) for ep in endpoints.values()),
+                         default=1)
+            capacity_bytes = max(per_ep * max_resident, 1)
+        cfg = ServerConfig(executor="wallclock", d=d,
+                           capacity_bytes=capacity_bytes)
+        self.server = make_server(cfg, endpoints=endpoints, policy=policy)
         self.endpoints = endpoints
         self.policy = policy
-        self.tokens = ConcurrencyController(max_d=d)
-        self.capacity_bytes = capacity_bytes
-        self.max_resident = max_resident or max(2, len(endpoints) // 2)
-        self._wake = threading.Event()
-        self._stop = threading.Event()
-        self._lock = threading.RLock()
-        self._pool = ThreadPoolExecutor(max_workers=max(d, 1))
-        self._dispatcher: Optional[threading.Thread] = None
-        self._t0 = time.monotonic()
-        self.completed: List[Invocation] = []
-        self._inflight = 0
-        self._next_id = 0
-        if isinstance(policy, MQFQSticky):
-            policy.state_listeners.append(self._on_state_change)
 
-    # -- time ---------------------------------------------------------------
+    # -- legacy API, forwarded to the unified server -------------------------
     def now(self) -> float:
-        return time.monotonic() - self._t0
+        return self.server.executor.now()
 
-    # -- memory integration ---------------------------------------------------
-    def _resident_lru_evict(self) -> None:
-        """Keep at most max_resident endpoints uploaded (LRU)."""
-        res = [(fid, ep) for fid, ep in self.endpoints.items()
-               if ep.resident]
-        if len(res) <= self.max_resident:
-            return
-        lru = sorted(res, key=lambda kv: getattr(kv[1], "last_use", 0.0))
-        for fid, ep in lru[: len(res) - self.max_resident]:
-            q = self.policy.queues.get(fid)
-            if q is not None and q.in_flight > 0:
-                continue
-            ep.evict()
-
-    def _on_state_change(self, q, old, new, now) -> None:
-        ep = self.endpoints.get(q.fn_id)
-        if ep is None:
-            return
-        if new is QueueState.ACTIVE and not ep.resident:
-            # anticipatory prefetch (async, off critical path)
-            self._pool.submit(ep.upload)
-
-    # -- API ------------------------------------------------------------------
     def submit(self, fn_id: str, request: Optional[dict] = None
                ) -> Invocation:
-        with self._lock:
-            inv = Invocation(fn_id, self.now(), inv_id=self._next_id)
-            self._next_id += 1
-            inv.request = request  # type: ignore[attr-defined]
-            self.policy.on_arrival(inv, inv.arrival)
-        self._wake.set()
-        return inv
+        return self.server.submit(fn_id, request)
 
     def start(self) -> None:
-        self._dispatcher = threading.Thread(target=self._run, daemon=True)
-        self._dispatcher.start()
+        self.server.start()
 
     def drain(self, timeout: float = 300.0) -> None:
-        t0 = time.monotonic()
-        while time.monotonic() - t0 < timeout:
-            with self._lock:
-                if self.policy.total_pending == 0 and self._inflight == 0:
-                    return
-            time.sleep(0.01)
-        raise TimeoutError("engine did not drain")
+        self.server.drain(timeout)
 
-    def stop(self) -> None:
-        self._stop.set()
-        self._wake.set()
-        if self._dispatcher:
-            self._dispatcher.join(timeout=10)
-        self._pool.shutdown(wait=True)
+    def stop(self):
+        return self.server.stop()
 
-    # -- dispatcher ---------------------------------------------------------------
-    def _run(self) -> None:
-        while not self._stop.is_set():
-            dispatched = self._try_dispatch()
-            if not dispatched:
-                self._wake.wait(timeout=0.05)
-                self._wake.clear()
-
-    def _try_dispatch(self) -> bool:
-        with self._lock:
-            now = self.now()
-            q = self.policy.choose(now)
-            if q is None:
-                return False
-            if not self.tokens.acquire():
-                return False
-            inv = q.pop()
-            self.policy.on_dispatch(q, inv, now)
-            inv.dispatch_time = now
-            self._inflight += 1
-        self._pool.submit(self._execute, inv)
-        return True
-
-    def _execute(self, inv: Invocation) -> None:
-        ep = self.endpoints[inv.fn_id]
-        try:
-            overhead0 = self.now()
-            with ep.lock:  # one container instance: run-to-completion
-                if not ep.compiled:
-                    inv.start_type = "cold"
-                    ep.compile()
-                elif not ep.resident:
-                    inv.start_type = "host_warm"
-                    ep.upload()
-                else:
-                    inv.start_type = "warm"
-                with self._lock:
-                    self._resident_lru_evict()
-                ep.last_use = self.now()
-                inv.exec_start = self.now()
-                inv.overhead = inv.exec_start - overhead0
-                out = ep.execute(getattr(inv, "request", None))
-                inv.service_time = out["exec_s"]
-        finally:
-            with self._lock:
-                inv.completion = self.now()
-                self.completed.append(inv)
-                q = self.policy.get_queue(inv.fn_id)
-                self.policy.on_complete(q, inv, inv.completion)
-                self.tokens.release()
-                self._inflight -= 1
-            self._wake.set()
+    @property
+    def completed(self) -> List[Invocation]:
+        return self.server.completed

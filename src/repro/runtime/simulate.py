@@ -1,266 +1,42 @@
-"""Discrete-event simulation of a GPU/TPU-slice function server.
+"""Deprecation shim over ``repro.server`` (the unified control plane).
 
-The scheduler (``repro.core``), memory manager and warm pool are the real
-control-plane code; this module provides the event loop and the device
-model (service times, interference, utilization) so the paper's
-experiments run deterministically on a CPU-only box. The same control
-plane drives real JAX execution in ``repro.runtime.engine``.
+The discrete-event simulator now lives in ``repro.server``: the control
+plane (policy + memory + warm pool + fairness + D-tokens) is
+``repro.server.control.ControlPlane`` and the virtual-clock event loop
+is ``repro.server.executors.SimExecutor``. This module keeps the
+historical entry points — ``run_sim``, ``Simulation``, ``SimResult``,
+``SimDevice`` — for existing call sites; new code should use::
 
-Device model:
-  - run-to-completion; up to D concurrent invocations (token controller)
-  - execution stretch under oversubscription:
-        exec = warm * mem_mult * (1 + beta * max(0, sum_demand - 1))
-    (the paper's D=3 contention, Fig. 6a); computed at dispatch time
-    (simplification: completions do not retroactively speed up peers)
-  - utilization = min(1, sum of running demands), sampled per event
+    from repro.server import ServerConfig, make_server
+    res = make_server(ServerConfig(...), fns=fns).run_trace(trace)
 """
 from __future__ import annotations
 
-import heapq
-import itertools
-import statistics
-from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List
 
-from repro.core.fairness import FairnessTracker
-from repro.core.mqfq import MQFQSticky
 from repro.core.policy_base import Policy
-from repro.core.tokens import ConcurrencyController
-from repro.core.flow import QueueState
-from repro.memory.manager import GB, DeviceMemoryManager
-from repro.memory.pool import WarmPool
-from repro.runtime.invocation import Invocation
+from repro.server.config import ServerConfig, make_server
+from repro.server.control import DeviceState as SimDevice  # noqa: F401
+from repro.server.metrics import RunResult as SimResult  # noqa: F401
 from repro.workloads.spec import FunctionSpec
 from repro.workloads.traces import TraceEvent
 
 
-@dataclass
-class SimDevice:
-    dev_id: int
-    mem: DeviceMemoryManager
-    tokens: ConcurrencyController
-    running: Dict[int, str] = field(default_factory=dict)  # inv_id -> fn
-    demands: Dict[int, float] = field(default_factory=dict)
-    busy_time: float = 0.0
-
-    def utilization(self) -> float:
-        return min(1.0, sum(self.demands.values()))
-
-
-@dataclass
-class SimResult:
-    policy: str
-    invocations: List[Invocation]
-    fairness: FairnessTracker
-    pool: WarmPool
-    util_samples: List[Tuple[float, float]]
-    devices: List[SimDevice]
-    duration: float
-
-    # -- metrics ------------------------------------------------------------
-    def mean_latency(self) -> float:
-        done = [i for i in self.invocations if i.done]
-        return statistics.fmean(i.latency for i in done) if done else 0.0
-
-    def per_fn_latency(self) -> Dict[str, List[float]]:
-        out: Dict[str, List[float]] = {}
-        for i in self.invocations:
-            if i.done:
-                out.setdefault(i.fn_id, []).append(i.latency)
-        return out
-
-    def per_fn_mean(self) -> Dict[str, float]:
-        return {f: statistics.fmean(v)
-                for f, v in self.per_fn_latency().items()}
-
-    def inter_fn_variance(self) -> float:
-        means = list(self.per_fn_mean().values())
-        return statistics.pvariance(means) if len(means) > 1 else 0.0
-
-    def intra_fn_variance(self) -> Dict[str, float]:
-        return {f: (statistics.pvariance(v) if len(v) > 1 else 0.0)
-                for f, v in self.per_fn_latency().items()}
-
-    def p99_latency(self) -> float:
-        lats = sorted(i.latency for i in self.invocations if i.done)
-        return lats[int(0.99 * (len(lats) - 1))] if lats else 0.0
-
-    def mean_utilization(self) -> float:
-        if not self.util_samples:
-            return 0.0
-        # time-weighted
-        tot, last_t, last_u = 0.0, 0.0, 0.0
-        for t, u in self.util_samples:
-            tot += last_u * (t - last_t)
-            last_t, last_u = t, u
-        return tot / max(self.duration, 1e-9)
-
-    def service_time_by_fn(self, t0: float, t1: float) -> Dict[str, float]:
-        out: Dict[str, float] = {}
-        for i in self.invocations:
-            if i.exec_start is None or i.completion is None:
-                continue
-            lo, hi = max(i.exec_start, t0), min(i.completion, t1)
-            if hi > lo:
-                out[i.fn_id] = out.get(i.fn_id, 0.0) + (hi - lo)
-        return out
-
-
 class Simulation:
-    ARRIVAL, COMPLETE = 0, 1
+    """Legacy wrapper: ``Simulation(policy, fns, trace, **kw).run()``.
+    ``kw`` maps 1:1 onto ``ServerConfig`` fields (the legacy kwargs —
+    n_devices, d, dynamic_d, mem_policy, capacity_bytes, pool_size,
+    beta, h2d_bw, fairness_window — kept their names and defaults)."""
 
     def __init__(self, policy: Policy, fns: Dict[str, FunctionSpec],
-                 trace: List[TraceEvent], *, n_devices: int = 1,
-                 d: int = 2, dynamic_d: bool = False,
-                 mem_policy: str = "prefetch_swap",
-                 capacity_bytes: int = 16 * GB, pool_size: int = 32,
-                 beta: float = 0.7, h2d_bw: float = 100 * GB,
-                 fairness_window: float = 30.0):
-        self.policy = policy
-        self.fns = fns
+                 trace: List[TraceEvent], **kw):
+        self.server = make_server(ServerConfig(**kw), fns=fns,
+                                  policy=policy)
         self.trace = trace
-        self.beta = beta
-        self.pool = WarmPool(pool_size)
-        self.devices = [
-            SimDevice(i, DeviceMemoryManager(capacity_bytes, h2d_bw,
-                                             mem_policy),
-                      ConcurrencyController(max_d=d, dynamic=dynamic_d))
-            for i in range(n_devices)]
-        T = getattr(policy, "T", 0.0)
-        self.fairness = FairnessTracker(window=fairness_window, T=T,
-                                        D=d * n_devices)
-        self.invocations: List[Invocation] = []
-        self.util_samples: List[Tuple[float, float]] = []
-        self._heap: List[Tuple[float, int, int, object]] = []
-        self._seq = itertools.count()
-        self._sticky_dev: Dict[str, int] = {}
-        self._containers: Dict[int, tuple] = {}
-
-        # queue-state -> memory hooks (MQFQ family); baselines prefetch at
-        # arrival and mark evictable at completion-of-last (paper applies
-        # its memory optimizations to every compared policy).
-        if isinstance(policy, MQFQSticky):
-            policy.state_listeners.append(self._on_state_change)
-
-    # -- memory hooks ----------------------------------------------------------
-    def _on_state_change(self, q, old, new, now) -> None:
-        spec = self.fns[q.fn_id]
-        dev = self._fn_device(q.fn_id)
-        if new is QueueState.ACTIVE:
-            dev.mem.on_queue_active(q.fn_id, spec.mem_bytes, now)
-        else:
-            dev.mem.on_queue_idle(q.fn_id, now)
-
-    def _fn_device(self, fn_id: str) -> SimDevice:
-        return self.devices[self._sticky_dev.get(fn_id, 0)]
-
-    # -- event machinery ---------------------------------------------------------
-    def _push(self, t: float, kind: int, payload) -> None:
-        heapq.heappush(self._heap, (t, next(self._seq), kind, payload))
+        self.policy = policy
 
     def run(self) -> SimResult:
-        for ev in self.trace:
-            inv = Invocation(ev.fn_id, ev.time, inv_id=len(self.invocations))
-            self.invocations.append(inv)
-            self._push(ev.time, self.ARRIVAL, inv)
-        now = 0.0
-        while self._heap:
-            now, _, kind, payload = heapq.heappop(self._heap)
-            if kind == self.ARRIVAL:
-                self._handle_arrival(payload, now)
-            else:
-                self._handle_complete(payload, now)
-            self._try_dispatch(now)
-            self._sample(now)
-            self.fairness.maybe_roll(now)
-        return SimResult(self.policy.name, self.invocations, self.fairness,
-                         self.pool, self.util_samples, self.devices, now)
-
-    def _sample(self, now: float) -> None:
-        util = (sum(d.utilization() for d in self.devices)
-                / len(self.devices))
-        self.util_samples.append((now, util))
-        for d in self.devices:
-            d.tokens.report_utilization(d.utilization())
-        self.policy.device_parallelism = self.devices[0].tokens.current_d
-        for q in self.policy.queues.values():
-            self.fairness.observe_backlog(q.fn_id, q.backlogged)
-
-    def _handle_arrival(self, inv: Invocation, now: float) -> None:
-        self.policy.on_arrival(inv, now)
-        if not isinstance(self.policy, MQFQSticky):
-            dev = self._fn_device(inv.fn_id)
-            dev.mem.on_queue_active(inv.fn_id,
-                                    self.fns[inv.fn_id].mem_bytes, now)
-
-    def _handle_complete(self, inv: Invocation, now: float) -> None:
-        dev = self.devices[inv.device_id]
-        dev.running.pop(inv.inv_id, None)
-        dev.demands.pop(inv.inv_id, None)
-        dev.tokens.release()
-        container = self._containers.pop(inv.inv_id)
-        self.pool.release(container, now)
-        q = self.policy.get_queue(inv.fn_id)
-        self.policy.on_complete(q, inv, now)
-        self.fairness.add_service(inv.fn_id, inv.service_time, q.tau)
-        if not isinstance(self.policy, MQFQSticky) and not q.backlogged:
-            dev.mem.on_queue_idle(inv.fn_id, now)
-
-    # -- dispatch -------------------------------------------------------------
-    def _pick_device(self, fn_id: str) -> Optional[SimDevice]:
-        """Sticky late binding: prefer the device where the function is
-        resident (avoids cross-device cold starts, paper §5 multi-GPU),
-        else the least-loaded device with a free token."""
-        free = [d for d in self.devices
-                if d.tokens.outstanding < d.tokens.current_d]
-        if not free:
-            return None
-        resident = [d for d in free if d.mem.is_resident(fn_id, 1e18)]
-        if resident:
-            return resident[0]
-        return min(free, key=lambda d: len(d.running))
-
-    def _try_dispatch(self, now: float) -> None:
-        while True:
-            q = self.policy.choose(now)
-            if q is None:
-                return
-            fn_id = q.fn_id
-            spec = self.fns[fn_id]
-            dev = self._pick_device(fn_id)
-            if dev is None:
-                return  # no D token anywhere (Alg. 1 line 12-13)
-            running_mem = {f: self.fns[f].mem_bytes
-                           for f in dev.running.values()}
-            if not dev.mem.admit(fn_id, spec.mem_bytes, running_mem, now):
-                return  # memory admission control (§4.4)
-            inv = q.pop()
-            self.policy.on_dispatch(q, inv, now)
-            dev.tokens.acquire()
-            self._sticky_dev[fn_id] = dev.dev_id
-
-            resident = dev.mem.is_resident(fn_id, now)
-            container, start_type = self.pool.acquire(fn_id, now, resident)
-            self._containers[inv.inv_id] = container
-            ready, mem_mult = dev.mem.acquire(fn_id, spec.mem_bytes, now)
-            overhead = (ready - now)
-            if start_type == "cold":
-                overhead += spec.cold_init
-            demand_sum = sum(dev.demands.values()) + spec.demand
-            stretch = 1.0 + self.beta * max(0.0, demand_sum - 1.0)
-            service = spec.warm_time * mem_mult * stretch
-
-            inv.dispatch_time = now
-            inv.start_type = start_type
-            inv.overhead = overhead
-            inv.exec_start = now + overhead
-            inv.service_time = service
-            inv.completion = inv.exec_start + service
-            inv.device_id = dev.dev_id
-            dev.running[inv.inv_id] = fn_id
-            dev.demands[inv.inv_id] = spec.demand
-            dev.busy_time += service
-            self._push(inv.completion, self.COMPLETE, inv)
+        return self.server.run_trace(self.trace)
 
 
 def run_sim(policy: Policy, fns, trace, **kw) -> SimResult:

@@ -1,0 +1,45 @@
+"""Unified serving control plane (paper Fig. 2, §4-§5).
+
+One clock-agnostic ``ControlPlane`` owns the full dispatch pipeline —
+MQFQ policy choose -> sticky device placement -> memory admission ->
+D-token + warm-pool + residency acquisition -> start-type classification
+— and is driven by two interchangeable executors:
+
+  ``SimExecutor``        virtual clock, discrete-event heap (the paper's
+                         experiments, deterministic on a CPU-only box)
+  ``WallClockExecutor``  dispatcher thread + worker pool over real
+                         ``JaxEndpoint`` execution
+
+Entry point::
+
+    from repro.server import ServerConfig, make_server
+
+    cfg = ServerConfig(policy="mqfq-sticky",
+                       policy_kwargs={"T": 10.0}, d=2)
+    res = make_server(cfg, fns=fns).run_trace(trace)     # simulation
+
+    cfg = ServerConfig(executor="wallclock", d=2)
+    srv = make_server(cfg, endpoints=endpoints)          # real JAX
+    srv.start(); srv.submit("qwen3-1.7b", {"seed": 0})
+    srv.drain(); res = srv.stop()
+
+Both paths return the same ``RunResult`` (latency / fairness /
+utilization accessors). ``repro.runtime.simulate.run_sim`` and
+``repro.runtime.engine.ServingEngine`` remain as thin deprecation shims
+over this package.
+"""
+from repro.server.config import ServerConfig, make_server, specs_from_endpoints
+from repro.server.control import ControlPlane, DeviceState, DispatchDecision
+from repro.server.events import (CompleteEvent, DispatchEvent, EventBus,
+                                 StateChangeEvent)
+from repro.server.executors import Server, SimExecutor, WallClockExecutor
+from repro.server.metrics import RunResult
+from repro.server.stub import StubEndpoint
+
+__all__ = [
+    "ServerConfig", "make_server", "specs_from_endpoints",
+    "ControlPlane", "DeviceState", "DispatchDecision",
+    "EventBus", "StateChangeEvent", "DispatchEvent", "CompleteEvent",
+    "Server", "SimExecutor", "WallClockExecutor",
+    "RunResult", "StubEndpoint",
+]

@@ -1,0 +1,86 @@
+"""Declarative server configuration + factory.
+
+``ServerConfig`` freezes every control-plane knob (policy, memory,
+devices, D, warm pool) plus the executor choice; ``make_server`` wires
+the pieces: policy -> ControlPlane -> executor -> Server facade.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, Mapping, Optional
+
+from repro.core.policy_base import Policy
+from repro.memory.manager import GB
+from repro.workloads.spec import FunctionSpec
+
+
+@dataclass(frozen=True)
+class ServerConfig:
+    # scheduling
+    policy: str = "mqfq-sticky"
+    policy_kwargs: Mapping = field(default_factory=dict)
+    d: int = 2                       # per-device concurrency tokens
+    dynamic_d: bool = False
+    # devices / memory
+    n_devices: int = 1
+    mem_policy: str = "prefetch_swap"
+    capacity_bytes: int = 16 * GB
+    h2d_bw: float = 100 * GB         # bytes/s DMA
+    # warm pool / interference / fairness
+    pool_size: int = 32
+    beta: float = 0.7                # oversubscription stretch (sim only)
+    fairness_window: float = 30.0
+    # executor: "sim" (virtual clock) or "wallclock" (threads + JAX)
+    executor: str = "sim"
+
+
+def specs_from_endpoints(endpoints, *, demand: float = 0.5
+                         ) -> Dict[str, FunctionSpec]:
+    """Derive control-plane FunctionSpecs from live endpoints: the memory
+    manager accounts real weight bytes; warm/cold times are only used by
+    the sim executor, so nominal values suffice here."""
+    return {
+        fn_id: FunctionSpec(fn_id, warm_time=1.0, cold_init=5.0,
+                            mem_bytes=max(int(ep.weight_bytes), 1),
+                            demand=demand, kind="endpoint")
+        for fn_id, ep in endpoints.items()}
+
+
+def make_server(config: ServerConfig, *,
+                fns: Optional[Dict[str, FunctionSpec]] = None,
+                endpoints: Optional[dict] = None,
+                policy: Optional[Policy] = None):
+    """Build a Server from a frozen config.
+
+    - ``executor="sim"``: requires ``fns``; drive it with
+      ``server.run_trace(trace)``.
+    - ``executor="wallclock"``: requires ``endpoints`` (``fns`` derived
+      from their weight bytes unless given); drive it with
+      ``start() / submit() / drain() / stop()``.
+    - ``policy``: optional pre-built Policy instance (tests/ablations);
+      otherwise built from ``config.policy`` + ``config.policy_kwargs``.
+    """
+    from repro.core.policies import make_policy
+    from repro.server.control import ControlPlane
+    from repro.server.events import EventBus
+    from repro.server.executors import (Server, SimExecutor,
+                                        WallClockExecutor)
+
+    if policy is None:
+        policy = make_policy(config.policy, **dict(config.policy_kwargs))
+    bus = EventBus()
+    if config.executor == "sim":
+        if fns is None:
+            raise ValueError("sim executor requires fns=")
+        control = ControlPlane(policy, fns, config, bus)
+        executor = SimExecutor(control, config)
+    elif config.executor == "wallclock":
+        if endpoints is None:
+            raise ValueError("wallclock executor requires endpoints=")
+        if fns is None:
+            fns = specs_from_endpoints(endpoints)
+        control = ControlPlane(policy, fns, config, bus)
+        executor = WallClockExecutor(control, endpoints, config)
+    else:
+        raise ValueError(f"unknown executor {config.executor!r}")
+    return Server(config, control, executor, bus)

@@ -1,0 +1,205 @@
+"""Clock-agnostic serving control plane (paper Alg. 1 + §4.3-§4.4).
+
+``ControlPlane`` owns every control-plane object — Policy, per-device
+``DeviceMemoryManager`` + D-token ``ConcurrencyController``, the shared
+``WarmPool`` and ``FairnessTracker`` — and implements the full dispatch
+pipeline:
+
+    choose -> pick_device -> admit -> acquire(tokens, container, memory)
+           -> classify start_type
+
+It never reads a clock and never models service time: executors feed it
+``now`` floats (virtual or wall) and decide what execution means. This is
+the single implementation behind both the discrete-event simulator and
+the wall-clock JAX engine, so every experiment exercises exactly the
+code the real serving path runs.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, TYPE_CHECKING
+
+from repro.core.fairness import FairnessTracker
+from repro.core.mqfq import MQFQSticky
+from repro.core.policy_base import Policy
+from repro.core.tokens import ConcurrencyController
+from repro.core.flow import QueueState
+from repro.memory.manager import DeviceMemoryManager
+from repro.memory.pool import WarmPool
+from repro.runtime.invocation import Invocation
+from repro.server.events import (CompleteEvent, DispatchEvent, EventBus,
+                                 StateChangeEvent)
+from repro.workloads.spec import FunctionSpec
+
+if TYPE_CHECKING:
+    from repro.server.config import ServerConfig
+
+
+@dataclass
+class DeviceState:
+    """One accelerator slice: memory manager + D-token controller +
+    in-flight bookkeeping."""
+    dev_id: int
+    mem: DeviceMemoryManager
+    tokens: ConcurrencyController
+    running: Dict[int, str] = field(default_factory=dict)  # inv_id -> fn
+    demands: Dict[int, float] = field(default_factory=dict)
+    busy_time: float = 0.0
+
+    def utilization(self) -> float:
+        return min(1.0, sum(self.demands.values()))
+
+
+@dataclass
+class DispatchDecision:
+    """Everything an executor needs to realize one dispatched invocation."""
+    inv: Invocation
+    device: DeviceState
+    spec: FunctionSpec
+    start_type: str           # warm | host_warm | cold
+    ready: float              # when the function's data is on device
+    mem_mult: float           # execution stretch from the memory policy
+
+
+class ControlPlane:
+    def __init__(self, policy: Policy, fns: Dict[str, FunctionSpec],
+                 config: "ServerConfig", bus: Optional[EventBus] = None):
+        self.policy = policy
+        self.fns = fns
+        self.config = config
+        self.bus = bus or EventBus()
+        self.pool = WarmPool(config.pool_size)
+        self.devices = [
+            DeviceState(i,
+                        DeviceMemoryManager(config.capacity_bytes,
+                                            config.h2d_bw,
+                                            config.mem_policy),
+                        ConcurrencyController(max_d=config.d,
+                                              dynamic=config.dynamic_d))
+            for i in range(config.n_devices)]
+        T = getattr(policy, "T", 0.0)
+        self.fairness = FairnessTracker(window=config.fairness_window, T=T,
+                                        D=config.d * config.n_devices)
+        self.util_samples: List = []
+        self._sticky_dev: Dict[str, int] = {}
+        self._containers: Dict[int, object] = {}
+
+        # queue-state -> memory hooks (MQFQ family); baselines prefetch at
+        # arrival and mark evictable at completion-of-last (paper applies
+        # its memory optimizations to every compared policy).
+        if isinstance(policy, MQFQSticky):
+            policy.state_listeners.append(self._on_state_change)
+
+    # -- queue-state hooks -----------------------------------------------------
+    def _on_state_change(self, q, old, new, now) -> None:
+        spec = self.fns[q.fn_id]
+        dev = self._fn_device(q.fn_id)
+        if new is QueueState.ACTIVE:
+            dev.mem.on_queue_active(q.fn_id, spec.mem_bytes, now)
+        else:
+            dev.mem.on_queue_idle(q.fn_id, now)
+        self.bus.emit_state_change(
+            StateChangeEvent(q.fn_id, old, new, now))
+
+    def _fn_device(self, fn_id: str) -> DeviceState:
+        return self.devices[self._sticky_dev.get(fn_id, 0)]
+
+    # -- pipeline: arrival -----------------------------------------------------
+    def on_arrival(self, inv: Invocation, now: float) -> None:
+        self.policy.on_arrival(inv, now)
+        if not isinstance(self.policy, MQFQSticky):
+            dev = self._fn_device(inv.fn_id)
+            dev.mem.on_queue_active(inv.fn_id,
+                                    self.fns[inv.fn_id].mem_bytes, now)
+
+    # -- pipeline: device placement --------------------------------------------
+    def pick_device(self, fn_id: str) -> Optional[DeviceState]:
+        """Sticky late binding: prefer the device where the function is
+        resident (avoids cross-device cold starts, paper §5 multi-GPU),
+        else the least-loaded device with a free token."""
+        free = [d for d in self.devices
+                if d.tokens.outstanding < d.tokens.current_d]
+        if not free:
+            return None
+        resident = [d for d in free if d.mem.is_resident(fn_id, 1e18)]
+        if resident:
+            return resident[0]
+        return min(free, key=lambda d: len(d.running))
+
+    # -- pipeline: dispatch -----------------------------------------------------
+    def try_dispatch(self, now: float) -> Optional[DispatchDecision]:
+        """One pass of Algorithm 1 DISPATCH. Returns None when nothing is
+        eligible (no candidate queue, no D token, or memory admission
+        refused)."""
+        q = self.policy.choose(now)
+        if q is None:
+            return None
+        fn_id = q.fn_id
+        spec = self.fns[fn_id]
+        dev = self.pick_device(fn_id)
+        if dev is None:
+            return None  # no D token anywhere (Alg. 1 line 12-13)
+        running_mem = {f: self.fns[f].mem_bytes
+                       for f in dev.running.values()}
+        if not dev.mem.admit(fn_id, spec.mem_bytes, running_mem, now):
+            return None  # memory admission control (§4.4)
+        inv = q.pop()
+        self.policy.on_dispatch(q, inv, now)
+        dev.tokens.acquire()
+        self._sticky_dev[fn_id] = dev.dev_id
+
+        resident = dev.mem.is_resident(fn_id, now)
+        container, start_type = self.pool.acquire(fn_id, now, resident)
+        self._containers[inv.inv_id] = container
+        ready, mem_mult = dev.mem.acquire(fn_id, spec.mem_bytes, now)
+
+        inv.dispatch_time = now
+        inv.start_type = start_type
+        inv.device_id = dev.dev_id
+        dev.running[inv.inv_id] = fn_id
+        dev.demands[inv.inv_id] = spec.demand
+        decision = DispatchDecision(inv, dev, spec, start_type, ready,
+                                    mem_mult)
+        self.bus.emit_dispatch(
+            DispatchEvent(inv, fn_id, dev.dev_id, start_type, now))
+        return decision
+
+    # -- pipeline: completion ----------------------------------------------------
+    def on_complete(self, inv: Invocation, now: float) -> None:
+        dev = self.devices[inv.device_id]
+        dev.running.pop(inv.inv_id, None)
+        dev.demands.pop(inv.inv_id, None)
+        dev.tokens.release()
+        container = self._containers.pop(inv.inv_id)
+        self.pool.release(container, now)
+        q = self.policy.get_queue(inv.fn_id)
+        self.policy.on_complete(q, inv, now)
+        self.fairness.add_service(inv.fn_id, inv.service_time, q.tau)
+        if not isinstance(self.policy, MQFQSticky) and not q.backlogged:
+            dev = self.devices[inv.device_id]
+            dev.mem.on_queue_idle(inv.fn_id, now)
+        self.bus.emit_complete(
+            CompleteEvent(inv, inv.fn_id, inv.device_id, now))
+
+    # -- per-event sampling -------------------------------------------------------
+    def sample(self, now: float) -> None:
+        """Utilization sample + dynamic-D feedback + fairness window roll.
+        Executors call this after every event (arrival/dispatch/complete)."""
+        util = (sum(d.utilization() for d in self.devices)
+                / len(self.devices))
+        self.util_samples.append((now, util))
+        for d in self.devices:
+            d.tokens.report_utilization(d.utilization())
+        self.policy.device_parallelism = self.devices[0].tokens.current_d
+        for q in self.policy.queues.values():
+            self.fairness.observe_backlog(q.fn_id, q.backlogged)
+        self.fairness.maybe_roll(now)
+
+    # -- introspection ------------------------------------------------------------
+    @property
+    def total_pending(self) -> int:
+        return self.policy.total_pending
+
+    @property
+    def total_inflight(self) -> int:
+        return sum(d.tokens.outstanding for d in self.devices)

@@ -1,0 +1,266 @@
+"""The two clocks that drive the shared ControlPlane.
+
+``SimExecutor``       — discrete-event heap over a virtual clock; models
+                        service times (warm time x memory multiplier x
+                        oversubscription stretch, paper Fig. 6a).
+``WallClockExecutor`` — dedicated dispatcher thread (paper §5) + bounded
+                        worker pool over real ``JaxEndpoint`` execution;
+                        service times are measured, not modeled.
+
+Both call exactly the same ControlPlane methods in the same order per
+event: on_arrival / try_dispatch / on_complete / sample. The ``Server``
+facade fronts whichever executor the config selects.
+"""
+from __future__ import annotations
+
+import heapq
+import itertools
+import threading
+import time
+from concurrent.futures import ThreadPoolExecutor
+from typing import Dict, List, Optional
+
+from repro.core.flow import QueueState
+from repro.runtime.invocation import Invocation
+from repro.server.control import ControlPlane, DispatchDecision
+from repro.server.events import EventBus
+from repro.server.metrics import RunResult
+
+
+class SimExecutor:
+    """Virtual-clock discrete-event executor (replaces the loop that
+    lived in ``repro.runtime.simulate.Simulation``)."""
+
+    ARRIVAL, COMPLETE = 0, 1
+
+    def __init__(self, control: ControlPlane, config):
+        self.control = control
+        self.config = config
+        self.invocations: List[Invocation] = []
+        self._heap: List = []
+        self._seq = itertools.count()
+
+    def _push(self, t: float, kind: int, payload) -> None:
+        heapq.heappush(self._heap, (t, next(self._seq), kind, payload))
+
+    def run(self, trace) -> RunResult:
+        cp = self.control
+        for ev in trace:
+            inv = Invocation(ev.fn_id, ev.time, inv_id=len(self.invocations))
+            self.invocations.append(inv)
+            self._push(ev.time, self.ARRIVAL, inv)
+        now = 0.0
+        while self._heap:
+            now, _, kind, payload = heapq.heappop(self._heap)
+            if kind == self.ARRIVAL:
+                cp.on_arrival(payload, now)
+            else:
+                cp.on_complete(payload, now)
+            while True:
+                decision = cp.try_dispatch(now)
+                if decision is None:
+                    break
+                self._realize(decision, now)
+            cp.sample(now)
+        return RunResult(cp.policy.name, self.invocations, cp.fairness,
+                         cp.pool, cp.util_samples, cp.devices, now)
+
+    def _realize(self, d: DispatchDecision, now: float) -> None:
+        """Model execution: overhead from data readiness + cold init,
+        service stretched by memory policy and oversubscription (paper
+        D=3 contention, Fig. 6a); completions do not retroactively speed
+        up peers."""
+        inv, spec, dev = d.inv, d.spec, d.device
+        overhead = d.ready - now
+        if d.start_type == "cold":
+            overhead += spec.cold_init
+        demand_sum = sum(dev.demands.values())  # includes this invocation
+        stretch = 1.0 + self.config.beta * max(0.0, demand_sum - 1.0)
+        service = spec.warm_time * d.mem_mult * stretch
+
+        inv.overhead = overhead
+        inv.exec_start = now + overhead
+        inv.service_time = service
+        inv.completion = inv.exec_start + service
+        dev.busy_time += service
+        self._push(inv.completion, self.COMPLETE, inv)
+
+
+class WallClockExecutor:
+    """Threaded executor over real endpoints (replaces the old
+    ``ServingEngine``), now with the full control plane: multi-device
+    placement, warm-pool container accounting, memory admission control
+    and fairness tracking."""
+
+    def __init__(self, control: ControlPlane, endpoints: Dict, config):
+        self.control = control
+        self.endpoints = endpoints
+        self.config = config
+        self._wake = threading.Event()
+        self._stop = threading.Event()
+        self._lock = threading.RLock()
+        workers = max(config.d * config.n_devices, 1)
+        self._pool = ThreadPoolExecutor(max_workers=workers + 1)
+        self._dispatcher: Optional[threading.Thread] = None
+        self._t0 = time.monotonic()
+        self.completed: List[Invocation] = []
+        self._inflight = 0
+        self._next_id = 0
+        # control-plane events -> real data movement
+        control.bus.on_state_change(self._on_state_change)
+        for dev in control.devices:
+            dev.mem.evict_listeners.append(self._on_region_evicted)
+
+    # -- time ---------------------------------------------------------------
+    def now(self) -> float:
+        return time.monotonic() - self._t0
+
+    # -- memory integration ----------------------------------------------------
+    def _on_state_change(self, ev) -> None:
+        """Anticipatory prefetch: queue turned Active -> upload weights
+        asynchronously, off the critical path (§4.3)."""
+        ep = self.endpoints.get(ev.fn_id)
+        if ep is None or ev.new is not QueueState.ACTIVE:
+            return
+        try:
+            self._pool.submit(self._prefetch, ep)
+        except RuntimeError:
+            pass  # pool shutting down: prefetch is best-effort anyway
+
+    @staticmethod
+    def _prefetch(ep) -> None:
+        with ep.lock:
+            if ep.compiled and not ep.resident:
+                ep.upload()
+
+    def _on_region_evicted(self, fn_id: str) -> None:
+        """The memory manager swapped a region out: mirror it on the real
+        endpoint (skip if the function is mid-execution; accounting and
+        reality reconcile at its next dispatch)."""
+        ep = self.endpoints.get(fn_id)
+        if ep is None:
+            return
+        q = self.control.policy.queues.get(fn_id)
+        if q is not None and q.in_flight > 0:
+            return
+        ep.evict()
+
+    # -- API ------------------------------------------------------------------
+    def submit(self, fn_id: str, request: Optional[dict] = None
+               ) -> Invocation:
+        with self._lock:
+            inv = Invocation(fn_id, self.now(), inv_id=self._next_id)
+            self._next_id += 1
+            inv.request = request  # type: ignore[attr-defined]
+            self.control.on_arrival(inv, inv.arrival)
+            self.control.sample(inv.arrival)
+        self._wake.set()
+        return inv
+
+    def start(self) -> None:
+        self._dispatcher = threading.Thread(target=self._run, daemon=True)
+        self._dispatcher.start()
+
+    def drain(self, timeout: float = 300.0) -> None:
+        t0 = time.monotonic()
+        while time.monotonic() - t0 < timeout:
+            with self._lock:
+                if self.control.total_pending == 0 and self._inflight == 0:
+                    return
+            time.sleep(0.01)
+        raise TimeoutError("engine did not drain")
+
+    def stop(self) -> RunResult:
+        self._stop.set()
+        self._wake.set()
+        if self._dispatcher:
+            self._dispatcher.join(timeout=10)
+        self._pool.shutdown(wait=True)
+        cp = self.control
+        return RunResult(cp.policy.name, list(self.completed), cp.fairness,
+                         cp.pool, cp.util_samples, cp.devices, self.now())
+
+    # -- dispatcher ---------------------------------------------------------------
+    def _run(self) -> None:
+        while not self._stop.is_set():
+            dispatched = self._try_dispatch()
+            if not dispatched:
+                self._wake.wait(timeout=0.05)
+                self._wake.clear()
+
+    def _try_dispatch(self) -> bool:
+        with self._lock:
+            decision = self.control.try_dispatch(self.now())
+            if decision is None:
+                return False
+            self._inflight += 1
+        self._pool.submit(self._execute, decision)
+        return True
+
+    def _execute(self, d: DispatchDecision) -> None:
+        inv = d.inv
+        ep = self.endpoints[inv.fn_id]
+        try:
+            overhead0 = self.now()
+            with ep.lock:  # one container instance: run-to-completion
+                # reconcile reality with the control plane's decision:
+                # cold -> compile (+upload), host_warm/warm -> ensure
+                # weights are on device (prefetch may still be in flight)
+                if not ep.compiled:
+                    ep.compile()
+                elif not ep.resident:
+                    ep.upload()
+                ep.last_use = self.now()
+                inv.exec_start = self.now()
+                inv.overhead = inv.exec_start - overhead0
+                out = ep.execute(getattr(inv, "request", None))
+                inv.service_time = out["exec_s"]
+        finally:
+            with self._lock:
+                now = self.now()
+                inv.completion = now
+                self.completed.append(inv)
+                self.control.on_complete(inv, now)
+                self.control.sample(now)
+                self._inflight -= 1
+            self._wake.set()
+
+
+class Server:
+    """Facade over (config, control plane, executor). Use ``run_trace``
+    with the sim executor; ``start/submit/drain/stop`` with wallclock."""
+
+    def __init__(self, config, control: ControlPlane, executor, bus: EventBus):
+        self.config = config
+        self.control = control
+        self.executor = executor
+        self.bus = bus
+
+    # -- sim ---------------------------------------------------------------
+    def run_trace(self, trace) -> RunResult:
+        if not isinstance(self.executor, SimExecutor):
+            raise TypeError("run_trace() requires executor='sim'")
+        return self.executor.run(trace)
+
+    # -- wallclock -----------------------------------------------------------
+    def _wallclock(self) -> WallClockExecutor:
+        if not isinstance(self.executor, WallClockExecutor):
+            raise TypeError("this method requires executor='wallclock'")
+        return self.executor
+
+    def start(self) -> None:
+        self._wallclock().start()
+
+    def submit(self, fn_id: str, request: Optional[dict] = None
+               ) -> Invocation:
+        return self._wallclock().submit(fn_id, request)
+
+    def drain(self, timeout: float = 300.0) -> None:
+        self._wallclock().drain(timeout)
+
+    def stop(self) -> RunResult:
+        return self._wallclock().stop()
+
+    @property
+    def completed(self) -> List[Invocation]:
+        return self._wallclock().completed

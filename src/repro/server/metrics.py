@@ -1,0 +1,85 @@
+"""Shared result/metrics API for simulated and wall-clock runs.
+
+``RunResult`` carries the invocation records plus the control-plane
+accounting objects (fairness tracker, warm pool, device states) and
+exposes the latency / fairness / utilization accessors the benchmarks
+use. The simulator's historical ``SimResult`` name is an alias.
+"""
+from __future__ import annotations
+
+import statistics
+from dataclasses import dataclass
+from typing import Dict, List, Tuple
+
+from repro.core.fairness import FairnessTracker
+from repro.memory.pool import WarmPool
+from repro.runtime.invocation import Invocation
+
+
+@dataclass
+class RunResult:
+    policy: str
+    invocations: List[Invocation]
+    fairness: FairnessTracker
+    pool: WarmPool
+    util_samples: List[Tuple[float, float]]
+    devices: List            # List[DeviceState]
+    duration: float
+
+    # -- latency ------------------------------------------------------------
+    def mean_latency(self) -> float:
+        done = [i for i in self.invocations if i.done]
+        return statistics.fmean(i.latency for i in done) if done else 0.0
+
+    def per_fn_latency(self) -> Dict[str, List[float]]:
+        out: Dict[str, List[float]] = {}
+        for i in self.invocations:
+            if i.done:
+                out.setdefault(i.fn_id, []).append(i.latency)
+        return out
+
+    def per_fn_mean(self) -> Dict[str, float]:
+        return {f: statistics.fmean(v)
+                for f, v in self.per_fn_latency().items()}
+
+    def inter_fn_variance(self) -> float:
+        means = list(self.per_fn_mean().values())
+        return statistics.pvariance(means) if len(means) > 1 else 0.0
+
+    def intra_fn_variance(self) -> Dict[str, float]:
+        return {f: (statistics.pvariance(v) if len(v) > 1 else 0.0)
+                for f, v in self.per_fn_latency().items()}
+
+    def p99_latency(self) -> float:
+        lats = sorted(i.latency for i in self.invocations if i.done)
+        return lats[int(0.99 * (len(lats) - 1))] if lats else 0.0
+
+    # -- utilization ---------------------------------------------------------
+    def mean_utilization(self) -> float:
+        if not self.util_samples:
+            return 0.0
+        # time-weighted
+        tot, last_t, last_u = 0.0, 0.0, 0.0
+        for t, u in self.util_samples:
+            tot += last_u * (t - last_t)
+            last_t, last_u = t, u
+        return tot / max(self.duration, 1e-9)
+
+    # -- service/fairness -----------------------------------------------------
+    def service_time_by_fn(self, t0: float, t1: float) -> Dict[str, float]:
+        out: Dict[str, float] = {}
+        for i in self.invocations:
+            if i.exec_start is None or i.completion is None:
+                continue
+            lo, hi = max(i.exec_start, t0), min(i.completion, t1)
+            if hi > lo:
+                out[i.fn_id] = out.get(i.fn_id, 0.0) + (hi - lo)
+        return out
+
+    # -- start types ----------------------------------------------------------
+    def start_type_counts(self) -> Dict[str, int]:
+        out: Dict[str, int] = {}
+        for i in self.invocations:
+            if i.done:
+                out[i.start_type] = out.get(i.start_type, 0) + 1
+        return out

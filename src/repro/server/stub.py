@@ -1,0 +1,67 @@
+"""In-memory endpoint stub implementing the JaxEndpoint protocol.
+
+Used by the sim-vs-wallclock parity tests and anywhere the wall-clock
+executor should run without JAX: ``execute`` returns immediately but
+*reports* the spec's warm time as its execution time, so policy state
+(tau EMAs, virtual time, fairness service) evolves exactly as in the
+virtual-clock simulation of the same trace.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from typing import Dict, Optional
+
+from repro.workloads.spec import FunctionSpec
+
+
+class StubEndpoint:
+    def __init__(self, fn_id: str, spec: FunctionSpec,
+                 delay: Optional[float] = 0.0):
+        """``delay``: real seconds to hold the endpoint busy per request;
+        ``None`` sleeps the spec's warm time, making wall-clock event
+        ordering (dispatch -> follow-up choose -> ... -> completion)
+        mirror the virtual clock's."""
+        self.fn_id = fn_id
+        self.spec = spec
+        self.delay = spec.warm_time if delay is None else delay
+        self.weight_bytes = spec.mem_bytes
+        self.lock = threading.Lock()
+        self.last_use = 0.0
+        self._compiled = False
+        self._resident = False
+        # op counters (asserted by tests)
+        self.compile_count = 0
+        self.upload_count = 0
+        self.evict_count = 0
+        self.execute_count = 0
+
+    @property
+    def compiled(self) -> bool:
+        return self._compiled
+
+    @property
+    def resident(self) -> bool:
+        return self._resident
+
+    def compile(self) -> float:
+        self._compiled = True
+        self._resident = True
+        self.compile_count += 1
+        return 0.0
+
+    def upload(self) -> float:
+        self._resident = True
+        self.upload_count += 1
+        return 0.0
+
+    def evict(self) -> None:
+        self._resident = False
+        self.evict_count += 1
+
+    def execute(self, request: Optional[dict] = None) -> Dict[str, float]:
+        assert self._compiled and self._resident
+        self.execute_count += 1
+        if self.delay:
+            time.sleep(self.delay)
+        return {"exec_s": self.spec.warm_time}

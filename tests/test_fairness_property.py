@@ -1,6 +1,9 @@
 """Property-based tests (hypothesis) for scheduler + memory invariants."""
 import math
 
+import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.flow import QueueState

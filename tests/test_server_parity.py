@@ -1,0 +1,127 @@
+"""Sim-vs-wallclock parity: both executors drive the SAME ControlPlane
+code, so replaying one trace through each must produce identical policy
+decisions and start-type sequences.
+
+Setup that makes wall-clock timing immaterial:
+  - d=1: strict alternation dispatch -> complete -> dispatch
+  - the first arrival is submitted alone and dispatched before the rest
+    are submitted, reproducing the event loop's interleaving at t=0
+    (arrival f0 -> dispatch f0 -> remaining arrivals), which is what
+    pins SFQ start-tag lifting to the same global VT on both sides
+  - StubEndpoint holds the device for the spec's warm time and reports
+    it as the measured exec time, so tau EMAs / virtual time / fairness
+    evolve exactly as in the sim
+  - tiny mem_bytes: modeled upload ETAs resolve within any real gap
+"""
+import time
+
+import pytest
+
+from repro.memory.manager import GB
+from repro.server import ServerConfig, StubEndpoint, make_server
+from repro.workloads.spec import FunctionSpec
+from repro.workloads.traces import TraceEvent
+
+N_REPEATS = 5
+
+
+def _fns():
+    taus = {"f0": 0.10, "f1": 0.17, "f2": 0.33}
+    return {f: FunctionSpec(f, warm_time=t, cold_init=0.5, mem_bytes=1024,
+                            demand=0.4)
+            for f, t in taus.items()}
+
+
+def _trace(fns):
+    # round-robin arrivals, all at t=0: every queue is backlogged from the
+    # start, so dispatch order is decided purely by the policy
+    return [TraceEvent(0.0, f) for _ in range(N_REPEATS) for f in fns]
+
+
+def _record(bus, log):
+    @bus.on_dispatch
+    def _(ev):
+        log.append((ev.fn_id, ev.device_id, ev.start_type))
+
+
+@pytest.mark.parametrize("T", [10.0, 0.2])  # 0.2 exercises throttling
+def test_sim_wallclock_parity(T):
+    fns = _fns()
+    cfg = dict(policy="mqfq-sticky", policy_kwargs={"T": T, "alpha": 5.0},
+               d=1, n_devices=1, capacity_bytes=1 * GB, pool_size=8)
+
+    sim = make_server(ServerConfig(executor="sim", **cfg), fns=fns)
+    sim_log = []
+    _record(sim.bus, sim_log)
+    sim_res = sim.run_trace(_trace(fns))
+
+    endpoints = {f: StubEndpoint(f, s, delay=None) for f, s in fns.items()}
+    wc = make_server(ServerConfig(executor="wallclock", **cfg),
+                     endpoints=endpoints, fns=fns)
+    wc_log = []
+    _record(wc.bus, wc_log)
+    wc.start()
+    events = _trace(fns)
+    wc.submit(events[0].fn_id, {"seed": 0})
+    deadline = time.monotonic() + 5.0
+    while not wc_log and time.monotonic() < deadline:
+        time.sleep(0.002)   # first dispatch before the other arrivals
+    assert wc_log, "first invocation was never dispatched"
+    for ev in events[1:]:
+        wc.submit(ev.fn_id, {"seed": 0})
+    wc.drain(timeout=60.0)
+    wc_res = wc.stop()
+
+    n = len(fns) * N_REPEATS
+    assert len(sim_res.invocations) == len(wc_res.invocations) == n
+    assert all(i.done for i in wc_res.invocations)
+
+    # identical policy decisions: same dispatch order, placement and
+    # start-type classification from the shared control plane
+    assert sim_log == wc_log
+
+    # same start-type sequence per invocation order and same warm-pool
+    # accounting (cold/warm/host_warm counters)
+    assert ([i.start_type for i in sim_res.invocations]
+            == [i.start_type
+                for i in sorted(wc_res.invocations, key=lambda i: i.inv_id)])
+    for attr in ("cold_starts", "warm_starts", "host_warm_starts"):
+        assert getattr(sim_res.pool, attr) == getattr(wc_res.pool, attr)
+
+    # fairness accounting sees the same per-function service totals
+    sim_svc = {f: sum(i.service_time for i in sim_res.invocations
+                      if i.fn_id == f) for f in fns}
+    wc_svc = {f: sum(i.service_time for i in wc_res.invocations
+                     if i.fn_id == f) for f in fns}
+    for f in fns:
+        assert sim_svc[f] == pytest.approx(wc_svc[f])
+
+    # every function cold-started exactly once (first dispatch), and with
+    # the generous T both paths should see warm starts afterwards
+    assert sim_res.pool.cold_starts == len(fns)
+
+
+def test_wallclock_gains_control_plane_features():
+    """The old ad-hoc engine had no warm pool / fairness / admission;
+    the unified control plane gives the wall-clock path all three."""
+    fns = _fns()
+    endpoints = {f: StubEndpoint(f, s) for f, s in fns.items()}
+    srv = make_server(
+        ServerConfig(executor="wallclock", policy="mqfq-sticky",
+                     policy_kwargs={"T": 5.0}, d=2),
+        endpoints=endpoints, fns=fns)
+    for ev in _trace(fns):
+        srv.submit(ev.fn_id)
+    srv.start()
+    srv.drain(timeout=60.0)
+    res = srv.stop()
+    assert len(res.invocations) == len(fns) * N_REPEATS
+    # warm-pool accounting is live
+    counts = res.start_type_counts()
+    assert counts.get("cold", 0) == len(fns)
+    assert sum(counts.values()) == len(res.invocations)
+    # fairness tracker accumulated real service time
+    assert res.fairness is not None
+    assert res.mean_latency() > 0.0
+    # memory manager tracked residency for every endpoint
+    assert set(res.devices[0].mem.regions) == set(fns)
