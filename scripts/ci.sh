@@ -1,13 +1,21 @@
 #!/usr/bin/env bash
-# CI gate: tier-1 test suite + a smoke benchmark through the unified
-# control-plane API. Run from the repo root.
+# CI gate: tier-1 test suite + scale smoke + a smoke benchmark through
+# the unified control-plane API. Run from the repo root.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
-echo "== tier-1 tests =="
-python -m pytest -x -q
+echo "== tier-1 tests (fast tier: -m 'not slow') =="
+python -m pytest -x -q -m "not slow"
+
+echo "== scale smoke: 100k-invocation streaming azure trace =="
+# streaming scenario through SimExecutor, lean metrics; fails if the
+# point exceeds the wall-clock budget (scheduler perf regression gate)
+python -m benchmarks.scale --sizes 100000 --flows 256 --budget 90
+
+echo "== scheduler speedup gate: indexed vs reference @ 1k flows =="
+python -m benchmarks.scale --sizes 4000 --flows 1000 --compare 4000
 
 echo "== smoke: fig6 through repro.server =="
 python -m benchmarks.run --only fig6

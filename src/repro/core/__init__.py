@@ -1,6 +1,8 @@
 from repro.core.flow import FlowQueue, QueueState
-from repro.core.mqfq import MQFQ, MQFQSticky
+from repro.core.index import SchedulerIndex
+from repro.core.mqfq import MQFQ, SFQ, MQFQSticky
 from repro.core.policies import FCFS, SJF, Batch, EEVDF, make_policy
 from repro.core.policy_base import Policy
+from repro.core.reference import ReferenceMQFQ, ReferenceMQFQSticky
 from repro.core.tokens import ConcurrencyController
 from repro.core.fairness import FairnessTracker

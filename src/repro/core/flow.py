@@ -26,6 +26,9 @@ class QueueState(enum.Enum):
 class FlowQueue:
     fn_id: str
     weight: float = 1.0
+    # creation index (dict order): SchedulerIndex uses it to reproduce the
+    # reference scheduler's stable-sort / dict-iteration tie-breaking
+    ins: int = 0
     # virtual time: total service accrued by this queue (paper Table 2)
     vt: float = 0.0
     state: QueueState = QueueState.INACTIVE

@@ -1,4 +1,4 @@
-"""MQFQ-Sticky (paper Algorithm 1) and plain MQFQ.
+"""MQFQ-Sticky (paper Algorithm 1) and plain MQFQ — indexed hot path.
 
 Differences from classic SFQ/MQFQ, per the paper:
   - queues may dispatch while VT <= Global_VT + T (queue over-run ->
@@ -13,19 +13,37 @@ the consistent reading (used by the fairness proof, Eq. 1) is the strict
 *eligible iff VT < Global_VT + T*. To keep T=0 work-conserving (classic
 SFQ, not starvation) the queue sitting at the Global_VT floor is always
 eligible: eligible iff (VT < G+T) or (VT <= G); throttled otherwise.
+
+This is the O(log F)-per-decision implementation over ``SchedulerIndex``
+(see ``repro.core.index``). The seed's O(F) linear-scan scheduler is kept
+verbatim in ``repro.core.reference`` as the executable specification;
+``tests/test_scheduler_equivalence.py`` proves this implementation
+produces bit-identical dispatch sequences and metrics. Two rules keep the
+equivalence exact:
+
+  - Transitions deferred by the reference to its next full rescan (TTL
+    expiries, un-throttles after a Global_VT advance) fire here at the
+    same call site — the top of ``choose`` — and in the same order: queue
+    creation order, which the index entries' ``ins`` tie-break preserves.
+  - Global_VT is the minimum VT over queues with *pending* work (not all
+    backlogged queues) in both implementations; see
+    ``repro.core.reference`` for why the seed's backlogged-based floor
+    stalled dispatch when a flow's work was entirely in flight.
 """
 from __future__ import annotations
 
 import random
-from typing import Dict, List, Optional
+from typing import List, Optional
 
 from repro.core.flow import FlowQueue, QueueState
+from repro.core.index import SchedulerIndex
 from repro.core.policy_base import Policy
 from repro.runtime.invocation import Invocation
 
 
 class MQFQSticky(Policy):
     name = "mqfq-sticky"
+    anticipatory = True
 
     def __init__(self, T: float = 10.0, alpha: float = 2.0,
                  sticky: bool = True, vt_by_service: bool = True,
@@ -39,12 +57,13 @@ class MQFQSticky(Policy):
         self.global_vt = 0.0
         self._rng = random.Random(seed)
         self.state_listeners = []
+        self.index = SchedulerIndex(self.queues)
 
     # -- helpers ------------------------------------------------------------
     def _refresh_global_vt(self) -> None:
-        vts = [q.vt for q in self.queues.values() if q.backlogged]
-        if vts:
-            self.global_vt = max(self.global_vt, min(vts))
+        vt = self.index.min_pending_vt()
+        if vt is not None and vt > self.global_vt:
+            self.global_vt = vt
 
     def _throttled(self, q: FlowQueue) -> bool:
         """Complement of Eq. 1's eligibility VT < Global_VT + T, except the
@@ -53,6 +72,10 @@ class MQFQSticky(Policy):
         return q.vt >= self.global_vt + self.T and q.vt > self.global_vt
 
     def _update_state(self, q: FlowQueue, now: float) -> None:
+        """Same state machine as the reference, plus index maintenance.
+        Every mutation of a queue's key fields (len, in_flight, vt, state,
+        last_exec) flows through here, so the index re-learns the queue's
+        current keys exactly when they can have changed."""
         old = q.state
         if not q.pending and q.in_flight == 0:
             if q.state is not QueueState.INACTIVE \
@@ -68,34 +91,58 @@ class MQFQSticky(Policy):
             q.state = QueueState.THROTTLED
         else:
             q.state = QueueState.ACTIVE
+        idx = self.index
+        if q.state is QueueState.ACTIVE and q.pending:
+            idx.note_candidate(q)
+        else:
+            idx.drop_candidate(q.fn_id)
+        if q.state is QueueState.THROTTLED:
+            idx.note_throttled(q)
+        if not q.pending and q.in_flight == 0 \
+                and q.state is not QueueState.INACTIVE:
+            idx.note_idle(q, self.alpha)
         if old is not q.state:
             for cb in self.state_listeners:
                 cb(q, old, q.state, now)
+
+    def _apply_deferred(self, now: float) -> None:
+        """Fire the transitions the reference discovers during its full
+        rescan: TTL expiries and throttle releases, in creation order."""
+        idx = self.index
+        due: List[FlowQueue] = list(idx.pop_due_expiries(now, self.alpha))
+        due += idx.pop_unthrottled(self.global_vt, self.T)
+        if not due:
+            return
+        seen = set()
+        due = [q for q in due
+               if q.fn_id not in seen and not seen.add(q.fn_id)]
+        due.sort(key=lambda q: q.ins)
+        for q in due:
+            self._update_state(q, now)
 
     # -- Policy interface -----------------------------------------------------
     def on_arrival(self, inv: Invocation, now: float) -> None:
         q = self.get_queue(inv.fn_id)
         q.arrive(inv, now, self.global_vt)
+        self.index.note_pending_vt(q)
         self._update_state(q, now)
 
     def choose(self, now: float) -> Optional[FlowQueue]:
         """Algorithm 1 DISPATCH (without the D-token, which the engine
-        holds): returns the chosen queue or None."""
+        holds): returns the chosen queue or None. O(log F) amortized on
+        the sticky path; the plain-MQFQ random path sorts the candidate
+        set (O(C log C)) because reproducing the reference's
+        ``rng.choice`` needs the full list in creation order."""
+        self.decisions += 1
         self._refresh_global_vt()
-        for q in self.queues.values():
-            self._update_state(q, now)
-        cand = [q for q in self.queues.values()
-                if q.state is QueueState.ACTIVE and len(q) > 0
-                and not self._throttled(q)]
-        if not cand:
+        self._apply_deferred(now)
+        idx = self.index
+        if not idx.cand:
             return None
         if self.sticky:
-            cand.sort(key=lambda q: -len(q))           # longest queue first
-            if self.device_parallelism != 1:
-                cand.sort(key=lambda q: q.in_flight)   # stable: fewest in-flight
-            return cand[0]
+            return idx.best_candidate(self.device_parallelism)
         # plain MQFQ: an arbitrary queue meeting the criteria
-        return self._rng.choice(cand)
+        return self._rng.choice(idx.candidates_in_creation_order())
 
     def on_dispatch(self, q: FlowQueue, inv: Invocation, now: float) -> None:
         if self.vt_by_service:
@@ -104,12 +151,22 @@ class MQFQSticky(Policy):
             tau, q.tau = q.tau, 1.0
             q.on_dispatch(inv, now)
             q.tau = tau
+        self.index.note_pending_vt(q)   # VT advanced (and len changed)
         self._refresh_global_vt()
         self._update_state(q, now)
 
     def on_complete(self, q: FlowQueue, inv: Invocation, now: float) -> None:
         q.on_complete(inv, now, inv.service_time)
+        self.index.note_pending_vt(q)   # deficit settle may move VT
         self._update_state(q, now)
+
+    # -- executor integration --------------------------------------------------
+    def next_expiry(self, now: float) -> Optional[float]:
+        """Earliest future anticipatory-TTL lapse; the SimExecutor arms a
+        timer event at this time so Inactive transitions (and the memory
+        swap-outs they drive) happen on schedule, not at the next
+        arrival/completion that happens to rescan."""
+        return self.index.peek_next_expiry(now, self.alpha)
 
 
 class MQFQ(MQFQSticky):
@@ -118,3 +175,12 @@ class MQFQ(MQFQSticky):
 
     def __init__(self, T: float = 10.0, alpha: float = 2.0, seed: int = 0):
         super().__init__(T=T, alpha=alpha, sticky=False, seed=seed)
+
+
+class SFQ(MQFQSticky):
+    """Classic start-time fair queueing: MQFQ-Sticky with a zero over-run
+    budget (T=0), the paper's strict-fairness ablation."""
+    name = "sfq"
+
+    def __init__(self, alpha: float = 2.0, seed: int = 0):
+        super().__init__(T=0.0, alpha=alpha, seed=seed)

@@ -101,7 +101,8 @@ class EEVDF(Policy):
 
 
 def make_policy(name: str, **kw) -> Policy:
-    from repro.core.mqfq import MQFQ, MQFQSticky
+    from repro.core.mqfq import MQFQ, SFQ, MQFQSticky
+    from repro.core.reference import ReferenceMQFQ, ReferenceMQFQSticky
     table = {
         "fcfs": FCFS,
         "batch": Batch,
@@ -109,5 +110,10 @@ def make_policy(name: str, **kw) -> Policy:
         "eevdf": EEVDF,
         "mqfq": MQFQ,
         "mqfq-sticky": MQFQSticky,
+        "sfq": SFQ,
+        # seed linear-scan implementations (differential testing / perf
+        # baselines; reported policy name matches the indexed twin)
+        "ref-mqfq": ReferenceMQFQ,
+        "ref-mqfq-sticky": ReferenceMQFQSticky,
     }
     return table[name](**kw)

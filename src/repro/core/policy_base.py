@@ -14,17 +14,24 @@ from repro.runtime.invocation import Invocation
 
 class Policy:
     name = "base"
+    # MQFQ-family marker: the policy runs the anticipatory queue state
+    # machine and expects queue-state-driven memory management (the
+    # control plane keys on this, not on concrete classes, so the
+    # reference and indexed implementations are treated identically).
+    anticipatory = False
 
     def __init__(self):
         self.queues: Dict[str, FlowQueue] = {}
         self.device_parallelism = 1
         self.state_listeners: List = []
         self.deficit_vt = False   # beyond-paper: measured-service VT settle
+        self.decisions = 0        # choose() calls (scale benchmark metric)
 
     def get_queue(self, fn_id: str) -> FlowQueue:
         q = self.queues.get(fn_id)
         if q is None:
-            q = FlowQueue(fn_id=fn_id, deficit_vt=self.deficit_vt)
+            q = FlowQueue(fn_id=fn_id, ins=len(self.queues),
+                          deficit_vt=self.deficit_vt)
             self.queues[fn_id] = q
         return q
 
@@ -40,6 +47,13 @@ class Policy:
 
     def on_complete(self, q: FlowQueue, inv: Invocation, now: float) -> None:
         q.on_complete(inv, now, inv.service_time)
+
+    def next_expiry(self, now: float) -> Optional[float]:
+        """Earliest strictly-future time at which this policy's internal
+        state changes without an arrival/completion (e.g. an anticipatory
+        TTL lapse). Executors arm a timer event at this time; None means
+        no timed transition is pending. Baselines have none."""
+        return None
 
     # -- shared accounting ---------------------------------------------------
     @property

@@ -55,6 +55,7 @@ class DeviceMemoryManager:
         self.bytes_uploaded = 0
         self.bytes_evicted = 0
         self.prefetch_count = 0
+        self._used = 0          # running sum of resident region sizes
 
     # -- bookkeeping ------------------------------------------------------
     def region(self, fn_id: str, size: int) -> Region:
@@ -62,15 +63,23 @@ class DeviceMemoryManager:
         if r is None:
             r = Region(fn_id, size)
             self.regions[fn_id] = r
-        r.size = size
+        if r.size != size:
+            if r.resident:
+                self._used += size - r.size
+            r.size = size
         return r
+
+    def _set_resident(self, r: Region, resident: bool) -> None:
+        if r.resident != resident:
+            self._used += r.size if resident else -r.size
+            r.resident = resident
 
     @property
     def used(self) -> int:
-        return sum(r.size for r in self.regions.values() if r.resident)
+        return self._used
 
     def free_bytes(self) -> int:
-        return self.capacity - self.used
+        return self.capacity - self._used
 
     # -- eviction -----------------------------------------------------------
     def _evict_lru(self, need: int, now: float,
@@ -88,7 +97,7 @@ class DeviceMemoryManager:
         )
         for pool in pools:
             for r in sorted(pool, key=lambda r: r.last_use):
-                r.resident = False
+                self._set_resident(r, False)
                 r.upload_eta = -1.0
                 self.bytes_evicted += r.size
                 self._notify_evict(r.fn_id)
@@ -112,7 +121,7 @@ class DeviceMemoryManager:
         if not self._evict_lru(r.size, now, protect=(fn_id,)):
             return  # no space: upload will happen at dispatch
         r.upload_eta = now + r.size / self.h2d_bw
-        r.resident = True       # reserved now, usable at upload_eta
+        self._set_resident(r, True)   # reserved now, usable at upload_eta
         self.prefetch_count += 1
         self.bytes_uploaded += r.size
 
@@ -126,7 +135,7 @@ class DeviceMemoryManager:
             # async swap-out; capacity released immediately, write-back
             # is off the critical path
             if r.resident and r.upload_eta <= now:
-                r.resident = False
+                self._set_resident(r, False)
                 self.bytes_evicted += r.size
                 self._notify_evict(r.fn_id)
 
@@ -151,7 +160,7 @@ class DeviceMemoryManager:
             # pages migrate on first touch during execution
             if not r.resident:
                 self._evict_lru(r.size, now, protect=(fn_id,))
-                r.resident = True
+                self._set_resident(r, True)
                 self.bytes_uploaded += r.size
                 mult_bytes = r.size / self.h2d_bw
                 # stretch execution instead of upfront wait
@@ -172,7 +181,7 @@ class DeviceMemoryManager:
             # no proactive swap-out: reclaim happens lazily during
             # execution (UVM-style page-out on demand) -> exec stretch
             mult = THRASH_PENALTY
-        r.resident = True
+        self._set_resident(r, True)
         r.upload_eta = now + r.size / self.h2d_bw
         self.bytes_uploaded += r.size
         return r.upload_eta, mult

@@ -17,10 +17,10 @@ from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
 
 
-@dataclass
-class Container:
-    fn_id: str
-    created: float
+@dataclass(eq=False)          # identity semantics: two containers of the
+class Container:              # same fn created at the same instant are
+    fn_id: str                # field-identical but distinct; list removal
+    created: float            # must never pick the twin
     last_use: float
     busy: bool = False
 
@@ -29,6 +29,10 @@ class WarmPool:
     def __init__(self, max_containers: int = 32):
         self.max_containers = max_containers
         self.containers: List[Container] = []
+        # per-function index of idle containers: keeps acquire O(idle
+        # copies of fn) instead of O(pool) — the pool scan dominated the
+        # dispatch path at thousands of flows
+        self._idle_by_fn: Dict[str, List[Container]] = {}
         # stats
         self.cold_starts = 0
         self.warm_starts = 0
@@ -37,11 +41,15 @@ class WarmPool:
 
     def _idle(self, fn_id: str) -> Optional[Container]:
         best = None
-        for c in self.containers:
-            if c.fn_id == fn_id and not c.busy:
-                if best is None or c.last_use > best.last_use:
-                    best = c
+        for c in self._idle_by_fn.get(fn_id, ()):
+            if best is None or c.last_use > best.last_use:
+                best = c
         return best
+
+    def _unindex(self, c: Container) -> None:
+        lst = self._idle_by_fn.get(c.fn_id)
+        if lst is not None and c in lst:
+            lst.remove(c)
 
     def count(self, fn_id: Optional[str] = None) -> int:
         if fn_id is None:
@@ -49,10 +57,11 @@ class WarmPool:
         return sum(1 for c in self.containers if c.fn_id == fn_id)
 
     def _evict_lru(self) -> bool:
-        idle = [c for c in self.containers if not c.busy]
+        idle = [c for lst in self._idle_by_fn.values() for c in lst]
         if not idle:
             return False
         victim = min(idle, key=lambda c: c.last_use)
+        self._unindex(victim)
         self.containers.remove(victim)
         self.evictions += 1
         return True
@@ -62,6 +71,7 @@ class WarmPool:
         """Returns (container, start_type)."""
         c = self._idle(fn_id)
         if c is not None:
+            self._unindex(c)
             c.busy = True
             c.last_use = now
             if device_resident:
@@ -81,9 +91,11 @@ class WarmPool:
     def release(self, c: Container, now: float) -> None:
         c.busy = False
         c.last_use = now
+        self._idle_by_fn.setdefault(c.fn_id, []).append(c)
 
     def evict_fn(self, fn_id: str) -> None:
         """Drop idle containers of an inactive function (LRU keep-alive)."""
+        self._idle_by_fn.pop(fn_id, None)
         self.containers = [
             c for c in self.containers if c.busy or c.fn_id != fn_id]
 

@@ -33,7 +33,7 @@ from repro.server.control import ControlPlane, DeviceState, DispatchDecision
 from repro.server.events import (CompleteEvent, DispatchEvent, EventBus,
                                  StateChangeEvent)
 from repro.server.executors import Server, SimExecutor, WallClockExecutor
-from repro.server.metrics import RunResult
+from repro.server.metrics import RunResult, StreamingStats
 from repro.server.stub import StubEndpoint
 
 __all__ = [
@@ -41,5 +41,5 @@ __all__ = [
     "ControlPlane", "DeviceState", "DispatchDecision",
     "EventBus", "StateChangeEvent", "DispatchEvent", "CompleteEvent",
     "Server", "SimExecutor", "WallClockExecutor",
-    "RunResult", "StubEndpoint",
+    "RunResult", "StreamingStats", "StubEndpoint",
 ]

@@ -32,6 +32,14 @@ class ServerConfig:
     fairness_window: float = 30.0
     # executor: "sim" (virtual clock) or "wallclock" (threads + JAX)
     executor: str = "sim"
+    # metrics: "full" records every invocation + utilization sample;
+    # "lean" streams aggregates (constant memory at any trace length)
+    metrics: str = "full"
+    # named workload scenario (repro.workloads.scenarios): when set and
+    # fns= is omitted, the server builds the scenario's function mix and
+    # ``run_scenario()`` replays its (streaming) arrival process
+    scenario: str = ""
+    scenario_kwargs: Mapping = field(default_factory=dict)
 
 
 def specs_from_endpoints(endpoints, *, demand: float = 0.5
@@ -69,12 +77,23 @@ def make_server(config: ServerConfig, *,
     if policy is None:
         policy = make_policy(config.policy, **dict(config.policy_kwargs))
     bus = EventBus()
+    scenario = None
     if config.executor == "sim":
+        if fns is None and config.scenario:
+            from repro.workloads.scenarios import make_scenario
+            scenario = make_scenario(config.scenario,
+                                     **dict(config.scenario_kwargs))
+            fns = scenario.fns
         if fns is None:
-            raise ValueError("sim executor requires fns=")
+            raise ValueError("sim executor requires fns= (or scenario=)")
         control = ControlPlane(policy, fns, config, bus)
         executor = SimExecutor(control, config)
     elif config.executor == "wallclock":
+        if config.scenario:
+            raise ValueError(
+                "scenario= is sim-only: the wallclock executor is driven "
+                "open-loop via submit(); replay the scenario's stream "
+                "yourself with make_scenario(...).stream()")
         if endpoints is None:
             raise ValueError("wallclock executor requires endpoints=")
         if fns is None:
@@ -83,4 +102,6 @@ def make_server(config: ServerConfig, *,
         executor = WallClockExecutor(control, endpoints, config)
     else:
         raise ValueError(f"unknown executor {config.executor!r}")
-    return Server(config, control, executor, bus)
+    server = Server(config, control, executor, bus)
+    server.scenario = scenario
+    return server

@@ -20,7 +20,6 @@ from dataclasses import dataclass, field
 from typing import Dict, List, Optional, TYPE_CHECKING
 
 from repro.core.fairness import FairnessTracker
-from repro.core.mqfq import MQFQSticky
 from repro.core.policy_base import Policy
 from repro.core.tokens import ConcurrencyController
 from repro.core.flow import QueueState
@@ -78,16 +77,25 @@ class ControlPlane:
                                               dynamic=config.dynamic_d))
             for i in range(config.n_devices)]
         T = getattr(policy, "T", 0.0)
+        lean = getattr(config, "metrics", "full") == "lean"
         self.fairness = FairnessTracker(window=config.fairness_window, T=T,
-                                        D=config.d * config.n_devices)
+                                        D=config.d * config.n_devices,
+                                        record_service=not lean)
+        # utilization: full sample trace for figures, or just the running
+        # time-integral when config.metrics == "lean" (constant memory on
+        # million-event runs)
         self.util_samples: List = []
+        self.util_integral = 0.0
+        self._last_util: tuple = (0.0, 0.0)           # (t, util)
+        self._record_util = getattr(config, "metrics", "full") != "lean"
+        self._backlogged: set = set()                 # fns with queued/in-flight work
         self._sticky_dev: Dict[str, int] = {}
         self._containers: Dict[int, object] = {}
 
         # queue-state -> memory hooks (MQFQ family); baselines prefetch at
         # arrival and mark evictable at completion-of-last (paper applies
         # its memory optimizations to every compared policy).
-        if isinstance(policy, MQFQSticky):
+        if policy.anticipatory:
             policy.state_listeners.append(self._on_state_change)
 
     # -- queue-state hooks -----------------------------------------------------
@@ -107,7 +115,8 @@ class ControlPlane:
     # -- pipeline: arrival -----------------------------------------------------
     def on_arrival(self, inv: Invocation, now: float) -> None:
         self.policy.on_arrival(inv, now)
-        if not isinstance(self.policy, MQFQSticky):
+        self._backlogged.add(inv.fn_id)
+        if not self.policy.anticipatory:
             dev = self._fn_device(inv.fn_id)
             dev.mem.on_queue_active(inv.fn_id,
                                     self.fns[inv.fn_id].mem_bytes, now)
@@ -175,25 +184,34 @@ class ControlPlane:
         q = self.policy.get_queue(inv.fn_id)
         self.policy.on_complete(q, inv, now)
         self.fairness.add_service(inv.fn_id, inv.service_time, q.tau)
-        if not isinstance(self.policy, MQFQSticky) and not q.backlogged:
-            dev = self.devices[inv.device_id]
-            dev.mem.on_queue_idle(inv.fn_id, now)
+        if not q.backlogged:
+            self._backlogged.discard(inv.fn_id)
+            self.fairness.on_backlog_change(inv.fn_id, False)
+            if not self.policy.anticipatory:
+                dev = self.devices[inv.device_id]
+                dev.mem.on_queue_idle(inv.fn_id, now)
         self.bus.emit_complete(
             CompleteEvent(inv, inv.fn_id, inv.device_id, now))
 
     # -- per-event sampling -------------------------------------------------------
     def sample(self, now: float) -> None:
         """Utilization sample + dynamic-D feedback + fairness window roll.
-        Executors call this after every event (arrival/dispatch/complete)."""
-        util = (sum(d.utilization() for d in self.devices)
-                / len(self.devices))
-        self.util_samples.append((now, util))
-        for d in self.devices:
-            d.tokens.report_utilization(d.utilization())
+        Executors call this after every event (arrival/dispatch/complete).
+        O(#devices) per call: backlog bookkeeping is transition-driven
+        (``_backlogged`` set) and the per-flow scans the seed did here now
+        run only at window rolls."""
+        utils = [d.utilization() for d in self.devices]
+        util = sum(utils) / len(utils)
+        last_t, last_u = self._last_util
+        self.util_integral += last_u * (now - last_t)
+        self._last_util = (now, util)
+        if self._record_util:
+            self.util_samples.append((now, util))
+        for d, u in zip(self.devices, utils):
+            d.tokens.report_utilization(u)
         self.policy.device_parallelism = self.devices[0].tokens.current_d
-        for q in self.policy.queues.values():
-            self.fairness.observe_backlog(q.fn_id, q.backlogged)
-        self.fairness.maybe_roll(now)
+        self.fairness.maybe_roll(now, self._backlogged,
+                                 self.policy.queues.keys())
 
     # -- introspection ------------------------------------------------------------
     @property

@@ -24,46 +24,102 @@ from repro.core.flow import QueueState
 from repro.runtime.invocation import Invocation
 from repro.server.control import ControlPlane, DispatchDecision
 from repro.server.events import EventBus
-from repro.server.metrics import RunResult
+from repro.server.metrics import RunResult, StreamingStats
 
 
 class SimExecutor:
     """Virtual-clock discrete-event executor (replaces the loop that
-    lived in ``repro.runtime.simulate.Simulation``)."""
+    lived in ``repro.runtime.simulate.Simulation``).
 
-    ARRIVAL, COMPLETE = 0, 1
+    Scales to million-invocation traces: arrivals are pulled lazily from
+    the trace iterable (one in the heap at a time, so streaming
+    generators run in constant memory), anticipatory-TTL expiries are
+    scheduled as first-class TIMER events from the policy's expiry index
+    (``Policy.next_expiry``) instead of being discovered at whichever
+    arrival/completion happens to rescan next, and ``metrics="lean"``
+    aggregates completions into ``StreamingStats`` rather than keeping
+    every ``Invocation``.
+
+    Event ordering key is (time, kind, seq): at equal timestamps arrivals
+    precede completions precede timers — the same tie-break the seed's
+    materialize-all-arrivals-first heap produced."""
+
+    ARRIVAL, COMPLETE, TIMER = 0, 1, 2
 
     def __init__(self, control: ControlPlane, config):
         self.control = control
         self.config = config
+        self.lean = getattr(config, "metrics", "full") == "lean"
         self.invocations: List[Invocation] = []
+        self.stats: Optional[StreamingStats] = \
+            StreamingStats() if self.lean else None
+        self.events = 0
         self._heap: List = []
         self._seq = itertools.count()
+        self._n_arrived = 0
+        self._last_arrival_t = float("-inf")
+        self._armed: set = set()        # TTL timer times already in the heap
 
     def _push(self, t: float, kind: int, payload) -> None:
-        heapq.heappush(self._heap, (t, next(self._seq), kind, payload))
+        heapq.heappush(self._heap, (t, kind, next(self._seq), payload))
+
+    def _pull_arrival(self, it) -> None:
+        """Admit the next trace event (arrivals stay sorted, so one
+        pending arrival in the heap keeps global event order)."""
+        ev = next(it, None)
+        if ev is None:
+            return
+        if ev.time < self._last_arrival_t:
+            raise ValueError(
+                f"trace must be time-sorted: got arrival at {ev.time} "
+                f"after {self._last_arrival_t} (the streaming executor "
+                f"admits one pending arrival at a time)")
+        self._last_arrival_t = ev.time
+        inv = Invocation(ev.fn_id, ev.time, inv_id=self._n_arrived)
+        self._n_arrived += 1
+        if not self.lean:
+            self.invocations.append(inv)
+        self._push(ev.time, self.ARRIVAL, inv)
 
     def run(self, trace) -> RunResult:
         cp = self.control
-        for ev in trace:
-            inv = Invocation(ev.fn_id, ev.time, inv_id=len(self.invocations))
-            self.invocations.append(inv)
-            self._push(ev.time, self.ARRIVAL, inv)
+        it = iter(trace)
+        self._pull_arrival(it)
         now = 0.0
         while self._heap:
-            now, _, kind, payload = heapq.heappop(self._heap)
+            now, kind, _, payload = heapq.heappop(self._heap)
+            self.events += 1
             if kind == self.ARRIVAL:
                 cp.on_arrival(payload, now)
-            else:
+                self._pull_arrival(it)
+            elif kind == self.COMPLETE:
                 cp.on_complete(payload, now)
+                if self.lean:
+                    self.stats.record(payload)
+            else:                       # TIMER: queue-state housekeeping
+                self._armed.discard(now)
             while True:
                 decision = cp.try_dispatch(now)
                 if decision is None:
                     break
                 self._realize(decision, now)
             cp.sample(now)
+            self._arm_timer(now)
         return RunResult(cp.policy.name, self.invocations, cp.fairness,
-                         cp.pool, cp.util_samples, cp.devices, now)
+                         cp.pool, cp.util_samples, cp.devices, now,
+                         stats=self.stats, util_integral=cp.util_integral)
+
+    def _arm_timer(self, now: float) -> None:
+        """Schedule the next anticipatory-TTL lapse as an event so the
+        policy's Active->Inactive transitions (and the memory swap-outs
+        they trigger) happen on time. One pending timer suffices — the
+        earliest — since its handler re-arms; ``_armed`` keeps revived
+        queues from re-queueing a time that is already scheduled."""
+        due = self.control.policy.next_expiry(now)
+        if due is not None \
+                and (not self._armed or due < min(self._armed)):
+            self._armed.add(due)
+            self._push(due, self.TIMER, None)
 
     def _realize(self, d: DispatchDecision, now: float) -> None:
         """Model execution: overhead from data readiness + cold init,
@@ -178,7 +234,8 @@ class WallClockExecutor:
         self._pool.shutdown(wait=True)
         cp = self.control
         return RunResult(cp.policy.name, list(self.completed), cp.fairness,
-                         cp.pool, cp.util_samples, cp.devices, self.now())
+                         cp.pool, cp.util_samples, cp.devices, self.now(),
+                         util_integral=cp.util_integral)
 
     # -- dispatcher ---------------------------------------------------------------
     def _run(self) -> None:
@@ -235,12 +292,20 @@ class Server:
         self.control = control
         self.executor = executor
         self.bus = bus
+        self.scenario = None       # set by make_server when config.scenario
 
     # -- sim ---------------------------------------------------------------
     def run_trace(self, trace) -> RunResult:
         if not isinstance(self.executor, SimExecutor):
             raise TypeError("run_trace() requires executor='sim'")
         return self.executor.run(trace)
+
+    def run_scenario(self) -> RunResult:
+        """Replay the configured named scenario's (streaming) arrival
+        process through the sim executor."""
+        if self.scenario is None:
+            raise ValueError("ServerConfig.scenario was not set")
+        return self.run_trace(self.scenario.stream())
 
     # -- wallclock -----------------------------------------------------------
     def _wallclock(self) -> WallClockExecutor:

@@ -7,13 +7,59 @@ use. The simulator's historical ``SimResult`` name is an alias.
 """
 from __future__ import annotations
 
+import random
 import statistics
-from dataclasses import dataclass
-from typing import Dict, List, Tuple
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
 
 from repro.core.fairness import FairnessTracker
 from repro.memory.pool import WarmPool
 from repro.runtime.invocation import Invocation
+
+
+class StreamingStats:
+    """Constant-memory run summary for ``metrics="lean"`` executions:
+    exact counts / means / per-function service totals plus a fixed-size
+    reservoir sample (seeded, deterministic) for latency quantiles. Lets
+    the simulator replay million-invocation traces without materializing
+    the invocation list."""
+
+    RESERVOIR = 8192
+
+    def __init__(self, seed: int = 0):
+        self.n = 0                        # completions recorded
+        self.latency_sum = 0.0
+        self.latency_max = 0.0
+        self.start_types: Dict[str, int] = {}
+        self.service_by_fn: Dict[str, float] = {}
+        self._reservoir: List[float] = []
+        self._rng = random.Random(seed)
+
+    def record(self, inv: Invocation) -> None:
+        lat = inv.latency
+        self.n += 1
+        self.latency_sum += lat
+        if lat > self.latency_max:
+            self.latency_max = lat
+        self.start_types[inv.start_type] = \
+            self.start_types.get(inv.start_type, 0) + 1
+        self.service_by_fn[inv.fn_id] = \
+            self.service_by_fn.get(inv.fn_id, 0.0) + inv.service_time
+        if len(self._reservoir) < self.RESERVOIR:
+            self._reservoir.append(lat)
+        else:
+            j = self._rng.randrange(self.n)
+            if j < self.RESERVOIR:
+                self._reservoir[j] = lat
+
+    def mean_latency(self) -> float:
+        return self.latency_sum / self.n if self.n else 0.0
+
+    def quantile(self, q: float) -> float:
+        if not self._reservoir:
+            return 0.0
+        lats = sorted(self._reservoir)
+        return lats[int(q * (len(lats) - 1))]
 
 
 @dataclass
@@ -25,13 +71,25 @@ class RunResult:
     util_samples: List[Tuple[float, float]]
     devices: List            # List[DeviceState]
     duration: float
+    # lean-mode (streaming) extras: aggregate stats instead of the full
+    # invocation list, and the utilization time-integral instead of the
+    # per-event sample trace
+    stats: Optional[StreamingStats] = None
+    util_integral: float = 0.0
 
     # -- latency ------------------------------------------------------------
     def mean_latency(self) -> float:
+        if not self.invocations and self.stats is not None:
+            return self.stats.mean_latency()
         done = [i for i in self.invocations if i.done]
         return statistics.fmean(i.latency for i in done) if done else 0.0
 
     def per_fn_latency(self) -> Dict[str, List[float]]:
+        if not self.invocations and self.stats is not None:
+            raise ValueError(
+                "per-function latency needs full invocation records; "
+                "this run used metrics='lean' (per-fn *service* totals "
+                "are available as stats.service_by_fn)")
         out: Dict[str, List[float]] = {}
         for i in self.invocations:
             if i.done:
@@ -50,14 +108,22 @@ class RunResult:
         return {f: (statistics.pvariance(v) if len(v) > 1 else 0.0)
                 for f, v in self.per_fn_latency().items()}
 
-    def p99_latency(self) -> float:
+    def latency_quantile(self, q: float) -> float:
+        if not self.invocations and self.stats is not None:
+            return self.stats.quantile(q)
         lats = sorted(i.latency for i in self.invocations if i.done)
-        return lats[int(0.99 * (len(lats) - 1))] if lats else 0.0
+        return lats[int(q * (len(lats) - 1))] if lats else 0.0
+
+    def p50_latency(self) -> float:
+        return self.latency_quantile(0.50)
+
+    def p99_latency(self) -> float:
+        return self.latency_quantile(0.99)
 
     # -- utilization ---------------------------------------------------------
     def mean_utilization(self) -> float:
         if not self.util_samples:
-            return 0.0
+            return self.util_integral / max(self.duration, 1e-9)
         # time-weighted
         tot, last_t, last_u = 0.0, 0.0, 0.0
         for t, u in self.util_samples:
@@ -78,8 +144,16 @@ class RunResult:
 
     # -- start types ----------------------------------------------------------
     def start_type_counts(self) -> Dict[str, int]:
+        if not self.invocations and self.stats is not None:
+            return dict(self.stats.start_types)
         out: Dict[str, int] = {}
         for i in self.invocations:
             if i.done:
                 out[i.start_type] = out.get(i.start_type, 0) + 1
         return out
+
+    @property
+    def completed_count(self) -> int:
+        if not self.invocations and self.stats is not None:
+            return self.stats.n
+        return sum(1 for i in self.invocations if i.done)

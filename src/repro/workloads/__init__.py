@@ -1,2 +1,5 @@
 from repro.workloads.spec import FunctionSpec, PAPER_FUNCTIONS, function_copies, DEFAULT_MIX
-from repro.workloads.traces import TraceEvent, zipf_trace, azure_trace, make_workload
+from repro.workloads.traces import (TraceEvent, zipf_trace, azure_trace,
+                                    make_workload, zipf_stream, azure_stream,
+                                    merge_streams)
+from repro.workloads.scenarios import SCENARIOS, Scenario, make_scenario

@@ -1,0 +1,232 @@
+"""Named workload scenarios: the stress cases a production GPU-FaaS
+control plane must survive (ROADMAP "heavy traffic, as many scenarios as
+you can imagine"), built on the streaming trace primitives so any of
+them runs at million-invocation scale in constant memory.
+
+    from repro.server import ServerConfig, make_server
+    srv = make_server(ServerConfig(scenario="flash-crowd",
+                                   scenario_kwargs={"n_fns": 64}))
+    res = srv.run_scenario()
+
+or directly:
+
+    sc = make_scenario("azure-longtail", n_fns=1000, scale=10.0,
+                       max_events=1_000_000)
+    res = server.run_trace(sc.stream())
+
+Scenarios
+  flash-crowd      — steady zipf background; one function's arrival rate
+                     spikes ``spike``x during a burst window (viral
+                     endpoint / retry storm).
+  diurnal          — every function's rate follows a day-night sinusoid;
+                     exercises the anticipatory TTL machinery as queues
+                     drain and revive each cycle.
+  tenant-hog       — an adversarial tenant submits at many times the
+                     aggregate polite-tenant rate; fairness must cap the
+                     hog's service share, not its arrival share.
+  cold-start-storm — a long tail of rarely-invoked functions arrives in
+                     synchronized waves, each wave mostly cold starts
+                     (keep-alive expired) contending for device memory.
+  azure-longtail   — the paper's heavy-tailed Azure-like mix at 10x/100x
+                     scale (functions and rate) for throughput testing.
+
+Every scenario accepts ``seed`` (determinism), ``duration`` (virtual
+seconds; ``inf`` allowed when ``max_events`` bounds the stream) and
+``max_events`` (cap on emitted arrivals)."""
+from __future__ import annotations
+
+import itertools
+import math
+from dataclasses import dataclass, field
+from typing import Callable, Dict, Iterator, Optional
+
+from repro.workloads.spec import DEFAULT_MIX, FunctionSpec, function_copies
+from repro.workloads.traces import (TraceEvent, azure_params, fn_rng,
+                                    iat_stream, merge_streams,
+                                    thinned_poisson_stream, zipf_rates)
+
+
+@dataclass
+class Scenario:
+    name: str
+    fns: Dict[str, FunctionSpec]
+    description: str
+    make_stream: Callable[[], Iterator[TraceEvent]]
+    max_events: Optional[int] = None
+
+    def stream(self) -> Iterator[TraceEvent]:
+        s = self.make_stream()
+        if self.max_events is not None:
+            s = itertools.islice(s, self.max_events)
+        return s
+
+
+SCENARIOS: Dict[str, Callable[..., Scenario]] = {}
+
+
+def scenario(name: str):
+    def register(builder):
+        SCENARIOS[name] = builder
+        return builder
+    return register
+
+
+def make_scenario(name: str, **kw) -> Scenario:
+    try:
+        builder = SCENARIOS[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown scenario {name!r}; have {sorted(SCENARIOS)}") from None
+    return builder(**kw)
+
+
+@scenario("flash-crowd")
+def flash_crowd(n_fns: int = 24, duration: float = 600.0,
+                total_rps: float = 2.0, spike: float = 50.0,
+                burst_start: float = 120.0, burst_len: float = 60.0,
+                seed: int = 0, max_events: Optional[int] = None) -> Scenario:
+    fns = function_copies(DEFAULT_MIX, n_fns)
+    rates = zipf_rates(fns, total_rps)
+    crowd = list(fns)[min(2, n_fns - 1)]   # a mid-popularity endpoint
+
+    def make_stream() -> Iterator[TraceEvent]:
+        def one(fid: str) -> Iterator[TraceEvent]:
+            rng = fn_rng(seed, fid)
+            base = rates[fid]
+            if fid != crowd:
+                return iat_stream(fid, lambda t: rng.expovariate(base),
+                                  duration)
+            rate_fn = lambda t: base * (
+                spike if burst_start <= t < burst_start + burst_len else 1.0)
+            return thinned_poisson_stream(fid, rate_fn, base * spike,
+                                          duration, rng)
+        return merge_streams(one(f) for f in fns)
+
+    return Scenario("flash-crowd", fns,
+                    f"{spike:g}x spike on {crowd} during "
+                    f"[{burst_start:g}, {burst_start + burst_len:g})s",
+                    make_stream, max_events)
+
+
+@scenario("diurnal")
+def diurnal(n_fns: int = 24, duration: float = 1200.0,
+            total_rps: float = 2.0, period: float = 300.0,
+            amplitude: float = 0.85, seed: int = 0,
+            max_events: Optional[int] = None) -> Scenario:
+    fns = function_copies(DEFAULT_MIX, n_fns)
+    rates = zipf_rates(fns, total_rps)
+
+    def make_stream() -> Iterator[TraceEvent]:
+        def one(fid: str) -> Iterator[TraceEvent]:
+            rng = fn_rng(seed, fid)
+            base = rates[fid]
+            # stagger phases so "days" don't align perfectly across fns
+            phase = 2 * math.pi * (zlib_frac(fid))
+            rate_fn = lambda t: base * (
+                1.0 + amplitude * math.sin(2 * math.pi * t / period + phase))
+            return thinned_poisson_stream(fid, rate_fn,
+                                          base * (1.0 + amplitude),
+                                          duration, rng)
+        return merge_streams(one(f) for f in fns)
+
+    return Scenario("diurnal", fns,
+                    f"sinusoidal load, period {period:g}s, "
+                    f"amplitude {amplitude:g}",
+                    make_stream, max_events)
+
+
+@scenario("tenant-hog")
+def tenant_hog(n_fns: int = 24, duration: float = 600.0,
+               polite_rps: float = 1.5, hog_factor: float = 20.0,
+               seed: int = 0, max_events: Optional[int] = None) -> Scenario:
+    fns = function_copies(DEFAULT_MIX, n_fns)
+    ids = list(fns)
+    hog = ids[0]
+    polite = ids[1:]
+    per_polite = polite_rps / max(len(polite), 1)
+    hog_rate = polite_rps * hog_factor
+
+    def make_stream() -> Iterator[TraceEvent]:
+        def one(fid: str) -> Iterator[TraceEvent]:
+            rng = fn_rng(seed, fid)
+            rate = hog_rate if fid == hog else per_polite
+            return iat_stream(fid, lambda t: rng.expovariate(rate), duration)
+        return merge_streams(one(f) for f in ids)
+
+    return Scenario("tenant-hog", fns,
+                    f"{hog} floods at {hog_factor:g}x the aggregate "
+                    f"polite rate",
+                    make_stream, max_events)
+
+
+@scenario("cold-start-storm")
+def cold_start_storm(n_fns: int = 96, duration: float = 900.0,
+                     wave_period: float = 120.0, wave_width: float = 5.0,
+                     participation: float = 0.7, seed: int = 0,
+                     max_events: Optional[int] = None) -> Scenario:
+    """Sparse functions arriving in synchronized waves: between waves the
+    anticipatory TTL (alpha * IAT ~ alpha * wave_period) and keep-alive
+    policies decide who stays resident; each wave front-loads cold
+    starts and memory churn."""
+    fns = function_copies(DEFAULT_MIX, n_fns)
+    # jitter must stay inside the wave spacing or per-function streams
+    # would emit out of order (merge_streams requires sorted inputs)
+    jitter = min(wave_width, wave_period)
+
+    def make_stream() -> Iterator[TraceEvent]:
+        def one(fid: str) -> Iterator[TraceEvent]:
+            rng = fn_rng(seed, fid)
+            wave = 0
+            while True:
+                wave += 1
+                t = wave * wave_period
+                if t >= duration:
+                    return
+                if rng.random() < participation:
+                    ev_t = t + rng.uniform(0.0, jitter)
+                    if ev_t < duration:
+                        yield TraceEvent(ev_t, fid)
+        return merge_streams(one(f) for f in fns)
+
+    return Scenario("cold-start-storm", fns,
+                    f"{n_fns} sparse fns, waves every {wave_period:g}s",
+                    make_stream, max_events)
+
+
+@scenario("azure-longtail")
+def azure_longtail(n_fns: int = 240, duration: float = float("inf"),
+                   trace_id: int = 3, scale: float = 10.0, seed: int = 0,
+                   total_rps: Optional[float] = None,
+                   max_events: Optional[int] = 100_000) -> Scenario:
+    """The paper's heavy-tailed mix scaled up: 10x/100x the function
+    count and aggregate rate of the Table-3 samples. Defaults stream
+    forever (duration=inf) capped by ``max_events``. ``total_rps``
+    renormalizes the aggregate expected arrival rate (keeping the
+    heavy-tailed per-function mix) so long replays can be pinned at a
+    stable operating point instead of unbounded-backlog overload."""
+    fns = function_copies(DEFAULT_MIX, n_fns)
+    params = azure_params(fns, trace_id=trace_id, scale=scale)
+    if total_rps is not None:
+        agg = sum(1.0 / m for m, _ in params.values())
+        params = {f: (m * agg / total_rps, s)
+                  for f, (m, s) in params.items()}
+
+    def make_stream() -> Iterator[TraceEvent]:
+        def one(fid: str) -> Iterator[TraceEvent]:
+            rng = fn_rng(1000 + trace_id + seed, fid)
+            mean_iat, shape = params[fid]
+            lam = mean_iat / math.gamma(1 + 1 / shape)
+            return iat_stream(fid,
+                              lambda t: rng.weibullvariate(lam, shape),
+                              duration)
+        return merge_streams(one(f) for f in fns)
+
+    return Scenario("azure-longtail", fns,
+                    f"{n_fns} fns, {scale:g}x Azure-like intensity",
+                    make_stream, max_events)
+
+
+def zlib_frac(fn_id: str) -> float:
+    """Stable per-function fraction in [0, 1) (phase staggering)."""
+    import zlib
+    return (zlib.crc32(fn_id.encode()) % 10_000) / 10_000.0

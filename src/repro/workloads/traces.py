@@ -1,4 +1,4 @@
-"""Open-loop trace generation (paper §6 "Setup and Workloads").
+"""Open-loop trace generation (paper §6 "Setup and Workloads") — streaming.
 
 Two workload classes:
   - Zipfian: per-function exponential inter-arrival times, average rates
@@ -7,13 +7,29 @@ Two workload classes:
     lognormal (the Azure FaaS trace is "extremely heavy-tailed"), with
     Weibull-shaped IATs (CV > 1, bursty). Different trace ids give
     different mixes/intensities, mirroring the paper's Table 3 samples.
+
+Every workload is a *lazy stream*: each function owns an independent
+inter-arrival-time generator (its own deterministically seeded RNG, so a
+stream's prefix never depends on how much of any other stream was
+consumed) and the per-function streams are merged through a k-way heap —
+one pending event per function, O(F) memory at any duration, O(log F)
+per emitted event. The historical ``zipf_trace``/``azure_trace`` list
+APIs materialize the same streams for small traces; the simulator's
+executor consumes streams directly so million-invocation replays never
+hold an event list.
+
+``repro.workloads.scenarios`` composes these primitives (plus
+rate-modulated thinning) into named scenarios.
 """
 from __future__ import annotations
 
+import heapq
 import math
 import random
+import zlib
 from dataclasses import dataclass
-from typing import Dict, List, Tuple
+from typing import (Callable, Dict, Iterable, Iterator, List, Optional,
+                    Tuple)
 
 from repro.workloads.spec import DEFAULT_MIX, FunctionSpec, function_copies
 
@@ -24,57 +40,129 @@ class TraceEvent:
     fn_id: str
 
 
-def _merge(streams: Dict[str, List[float]]) -> List[TraceEvent]:
-    events = [TraceEvent(t, fn) for fn, ts in streams.items() for t in ts]
-    events.sort(key=lambda e: e.time)
-    return events
+# -- stream primitives ------------------------------------------------------
+def fn_rng(seed: int, fn_id: str) -> random.Random:
+    """Deterministic per-function RNG: independent of consumption order
+    of sibling streams (unlike the seed's one-shared-RNG generation) and
+    stable across processes (crc32, not the salted builtin hash)."""
+    return random.Random(((seed + 1) << 32) ^ zlib.crc32(fn_id.encode()))
 
 
-def zipf_trace(fns: Dict[str, FunctionSpec], duration: float,
-               total_rps: float, zipf_param: float = 1.5,
-               seed: int = 0) -> List[TraceEvent]:
-    """Average arrival rates ~ zipf over functions; exponential IATs."""
-    rng = random.Random(seed)
+def iat_stream(fn_id: str, draw_iat: Callable[[float], float],
+               duration: float) -> Iterator[TraceEvent]:
+    """Renewal arrival process: ``draw_iat(t)`` returns the next gap."""
+    t = 0.0
+    while True:
+        t += draw_iat(t)
+        if t >= duration:
+            return
+        yield TraceEvent(t, fn_id)
+
+
+def thinned_poisson_stream(fn_id: str, rate_fn: Callable[[float], float],
+                           rate_max: float, duration: float,
+                           rng: random.Random) -> Iterator[TraceEvent]:
+    """Non-homogeneous Poisson process by thinning: candidates at the
+    envelope rate, accepted with probability rate(t)/rate_max. Drives the
+    rate-modulated scenarios (flash crowds, diurnal cycles)."""
+    t = 0.0
+    while True:
+        t += rng.expovariate(rate_max)
+        if t >= duration:
+            return
+        if rng.random() * rate_max < rate_fn(t):
+            yield TraceEvent(t, fn_id)
+
+
+def merge_streams(streams: Iterable[Iterator[TraceEvent]]
+                  ) -> Iterator[TraceEvent]:
+    """K-way merge of time-ordered event streams: one pending event per
+    stream, constant memory at any trace length."""
+    heap: List[Tuple[float, int, TraceEvent, Iterator[TraceEvent]]] = []
+    for i, s in enumerate(streams):
+        ev = next(s, None)
+        if ev is not None:
+            heap.append((ev.time, i, ev, s))
+    heapq.heapify(heap)
+    while heap:
+        _, i, ev, s = heap[0]
+        yield ev
+        nxt = next(s, None)
+        if nxt is None:
+            heapq.heappop(heap)
+        else:
+            heapq.heapreplace(heap, (nxt.time, i, nxt, s))
+
+
+# -- workload families ------------------------------------------------------
+def zipf_rates(fns: Dict[str, FunctionSpec], total_rps: float,
+               zipf_param: float = 1.5) -> Dict[str, float]:
     ids = list(fns)
     weights = [1.0 / (i + 1) ** zipf_param for i in range(len(ids))]
     wsum = sum(weights)
-    streams: Dict[str, List[float]] = {}
-    for fid, w in zip(ids, weights):
-        rate = total_rps * w / wsum
-        t, ts = 0.0, []
-        while True:
-            t += rng.expovariate(rate)
-            if t >= duration:
-                break
-            ts.append(t)
-        streams[fid] = ts
-    return _merge(streams)
+    return {fid: total_rps * w / wsum for fid, w in zip(ids, weights)}
 
 
-def azure_trace(fns: Dict[str, FunctionSpec], duration: float,
-                trace_id: int = 4, scale: float = 1.0) -> List[TraceEvent]:
-    """Heavy-tailed Azure-sample-like trace. ``trace_id`` seeds the mix
-    (the paper's Table 3 uses 9 samples of varying intensity)."""
+def zipf_stream(fns: Dict[str, FunctionSpec], duration: float,
+                total_rps: float, zipf_param: float = 1.5,
+                seed: int = 0) -> Iterator[TraceEvent]:
+    """Average arrival rates ~ zipf over functions; exponential IATs."""
+    rates = zipf_rates(fns, total_rps, zipf_param)
+
+    def stream(fid: str, rate: float) -> Iterator[TraceEvent]:
+        rng = fn_rng(seed, fid)
+        return iat_stream(fid, lambda t: rng.expovariate(rate), duration)
+
+    return merge_streams(stream(f, r) for f, r in rates.items())
+
+
+def azure_params(fns: Dict[str, FunctionSpec], trace_id: int = 4,
+                 scale: float = 1.0) -> Dict[str, Tuple[float, float]]:
+    """Per-function (mean_iat, weibull_shape) for an Azure-like mix.
+    ``trace_id`` seeds the mix (the paper's Table 3 uses 9 samples of
+    varying intensity); ``scale`` multiplies every arrival rate."""
     rng = random.Random(1000 + trace_id)
     # intensity profile per trace id (approximate Table-3 util spread)
     intensity = [0.55, 0.65, 0.75, 1.0, 1.25, 0.6, 1.35, 0.65, 0.85][
         trace_id % 9] * scale
-    streams: Dict[str, List[float]] = {}
+    out: Dict[str, Tuple[float, float]] = {}
     for fid in fns:
         # mean IAT lognormal: heavy right tail (rare functions); median
         # calibrated so trace 3 (~intensity 1.0, 19-24 fns) lands around
         # 70% device utilization at D=2, like the paper's medium trace
         mean_iat = rng.lognormvariate(math.log(44.0), 1.2) / intensity
         shape = rng.uniform(0.6, 0.9)  # Weibull shape < 1 -> bursty, CV > 1
-        t, ts = 0.0, []
-        while True:
-            t += rng.weibullvariate(
-                mean_iat / math.gamma(1 + 1 / shape), shape)
-            if t >= duration:
-                break
-            ts.append(t)
-        streams[fid] = ts
-    return _merge(streams)
+        out[fid] = (mean_iat, shape)
+    return out
+
+
+def azure_stream(fns: Dict[str, FunctionSpec], duration: float,
+                 trace_id: int = 4, scale: float = 1.0
+                 ) -> Iterator[TraceEvent]:
+    """Heavy-tailed Azure-sample-like trace, lazily generated."""
+    params = azure_params(fns, trace_id=trace_id, scale=scale)
+
+    def stream(fid: str, mean_iat: float, shape: float
+               ) -> Iterator[TraceEvent]:
+        rng = fn_rng(1000 + trace_id, fid)
+        lam = mean_iat / math.gamma(1 + 1 / shape)
+        return iat_stream(fid, lambda t: rng.weibullvariate(lam, shape),
+                          duration)
+
+    return merge_streams(stream(f, m, s) for f, (m, s) in params.items())
+
+
+# -- historical list APIs ---------------------------------------------------
+def zipf_trace(fns: Dict[str, FunctionSpec], duration: float,
+               total_rps: float, zipf_param: float = 1.5,
+               seed: int = 0) -> List[TraceEvent]:
+    return list(zipf_stream(fns, duration, total_rps,
+                            zipf_param=zipf_param, seed=seed))
+
+
+def azure_trace(fns: Dict[str, FunctionSpec], duration: float,
+                trace_id: int = 4, scale: float = 1.0) -> List[TraceEvent]:
+    return list(azure_stream(fns, duration, trace_id=trace_id, scale=scale))
 
 
 def make_workload(kind: str, n_fns: int = 24, duration: float = 300.0,

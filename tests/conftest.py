@@ -1,5 +1,17 @@
 import pytest
 
 
+def pytest_addoption(parser):
+    parser.addoption(
+        "--update-golden", action="store_true", default=False,
+        help="rewrite tests/golden/*.json from the current run instead "
+             "of asserting against it")
+
+
 def pytest_configure(config):
     config.addinivalue_line("markers", "slow: long-running integration test")
+
+
+@pytest.fixture
+def update_golden(request):
+    return request.config.getoption("--update-golden")

@@ -1,0 +1,82 @@
+"""Golden-metric regression: per-policy RunResult summaries for two
+fixed-seed traces are pinned in ``tests/golden/*.json``. Any refactor
+that silently changes dispatch behavior — and therefore the numbers the
+paper figures are built from — fails here.
+
+Intentional behavior changes are re-baselined with:
+
+    PYTHONPATH=src python -m pytest tests/test_golden_metrics.py \
+        --update-golden
+
+and the golden diff is reviewed like any other code change.
+"""
+import json
+import os
+
+import pytest
+
+from repro.server import ServerConfig, make_server
+from repro.workloads.traces import make_workload
+
+GOLDEN_DIR = os.path.join(os.path.dirname(__file__), "golden")
+
+# two fixed-seed traces x the policy comparison set
+TRACES = {
+    "zipf-s0": lambda: make_workload("zipf", n_fns=12, duration=150.0,
+                                     total_rps=3.0, seed=0),
+    "azure-t3": lambda: make_workload("azure", n_fns=16, duration=200.0,
+                                      trace_id=3),
+}
+POLICIES = ["mqfq-sticky", "mqfq", "sfq", "fcfs", "sjf"]
+REL_TOL = 1e-9          # exact up to float round-trip / libm jitter
+
+
+def summarize(res) -> dict:
+    starts = res.start_type_counts()
+    return {
+        "n": len(res.invocations),
+        "mean_latency": res.mean_latency(),
+        "p50_latency": res.p50_latency(),
+        "p99_latency": res.p99_latency(),
+        "cold_starts": starts.get("cold", 0),
+        "warm_starts": starts.get("warm", 0),
+        "host_warm_starts": starts.get("host_warm", 0),
+        "inter_fn_variance": res.inter_fn_variance(),
+        "mean_utilization": res.mean_utilization(),
+        "fairness_max_gap": max(
+            (w.max_gap for w in res.fairness.windows), default=0.0),
+    }
+
+
+def run(trace_name: str, policy: str) -> dict:
+    fns, trace = TRACES[trace_name]()
+    cfg = ServerConfig(policy=policy,
+                       policy_kwargs={"seed": 3} if policy == "mqfq" else {},
+                       d=2)
+    return summarize(make_server(cfg, fns=fns).run_trace(trace))
+
+
+@pytest.mark.parametrize("trace_name", sorted(TRACES))
+def test_golden_metrics(trace_name, update_golden):
+    path = os.path.join(GOLDEN_DIR, f"{trace_name}.json")
+    got = {p: run(trace_name, p) for p in POLICIES}
+    if update_golden:
+        os.makedirs(GOLDEN_DIR, exist_ok=True)
+        with open(path, "w") as f:
+            json.dump(got, f, indent=2, sort_keys=True)
+            f.write("\n")
+        pytest.skip(f"golden rewritten: {path}")
+    assert os.path.exists(path), \
+        f"missing {path}: run with --update-golden to create it"
+    with open(path) as f:
+        want = json.load(f)
+    assert sorted(got) == sorted(want), "policy set changed"
+    for pol in want:
+        for key, expect in want[pol].items():
+            actual = got[pol][key]
+            if isinstance(expect, float):
+                assert actual == pytest.approx(expect, rel=REL_TOL), \
+                    f"{trace_name}/{pol}/{key}: {actual} != golden {expect}"
+            else:
+                assert actual == expect, \
+                    f"{trace_name}/{pol}/{key}: {actual} != golden {expect}"

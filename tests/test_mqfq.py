@@ -86,27 +86,47 @@ class TestThrottling:
         arrive(pol, "popular", 0.0, n=100)
         arrive(pol, "rare", 0.0, n=1)
         qp = pol.get_queue("popular")
-        qr = pol.get_queue("rare")
         qp.tau = 1.0
-        qr.tau = 1.0
-        # rare's invocation is dispatched but never completes -> its VT
-        # pins Global_VT while it stays backlogged (in_flight > 0)
-        dispatched = []
-        for _ in range(100):
-            r = dispatch(pol, 0.0)
-            if r is None:
+        pol.get_queue("rare").tau = 1.0
+        # rare's pending invocation pins Global_VT at 0; sticky prefers
+        # the longer popular queue until the over-run budget T runs out
+        dispatched = 0
+        while True:
+            q = pol.choose(0.0)
+            assert q is not None
+            if q.fn_id != "popular":
                 break
-            dispatched.append(r[0].fn_id)
-        # popular ran until the over-run budget T was exhausted
-        assert dispatched.count("popular") <= 4  # ~T/tau dispatches
+            pol.on_dispatch(q, q.pop(), 0.0)
+            dispatched += 1
+        assert 1 <= dispatched <= 4  # ~T/tau dispatches
         assert qp.state is QueueState.THROTTLED
         assert qp.vt >= pol.global_vt + 3.0 - 1e-9
-        # completing rare's work advances Global_VT and unthrottles
-        inv = Invocation("rare", 0.0)
-        inv.service_time = 1.0
-        qr.vt += 4.0
-        pol.on_complete(qr, inv, 5.0)
-        assert pol.choose(5.0) is not None
+        # the peer at the floor is the only eligible queue now...
+        assert q.fn_id == "rare"
+        pol.on_dispatch(q, q.pop(), 0.0)
+        # ...and dispatching it advances Global_VT, unthrottling popular
+        assert pol.choose(0.0).fn_id == "popular"
+
+    def test_inflight_only_queue_does_not_stall_global_vt(self):
+        """Regression for the seed's Global_VT stall: a queue whose work
+        is entirely in flight cannot advance its own VT, so it must not
+        pin the Global_VT floor — under the seed's backlogged-based
+        refresh, a throttled peer with pending work sat idle (device
+        free, work queued) until the in-flight invocation completed."""
+        pol = MQFQSticky(T=2.0)
+        arrive(pol, "bg", 0.0, n=1)
+        arrive(pol, "fg", 0.0, n=10)
+        pol.get_queue("bg").tau = 1.0
+        pol.get_queue("fg").tau = 1.0
+        # fg over-runs, throttles; bg's single invocation dispatches and
+        # stays in flight (never completes). With bg in-flight-only the
+        # floor must follow fg's pending work, so fg keeps dispatching.
+        for _ in range(6):
+            r = dispatch(pol, 0.0)
+            assert r is not None, "dispatch stalled with pending work"
+        q = pol.choose(0.0)
+        assert q is not None and q.fn_id == "fg"
+        assert pol.get_queue("bg").in_flight == 1
 
     def test_T_zero_is_strict_fair_queueing(self):
         pol = MQFQSticky(T=0.0)
@@ -119,10 +139,11 @@ class TestAnticipatoryTTL:
     def test_empty_queue_stays_active_within_ttl(self):
         pol = MQFQSticky(T=10, alpha=2.0)
         arrive(pol, "a", 0.0)
+        q = pol.get_queue("a")
+        q.iat = 5.0  # TTL = 10 (set before idling: TTL inputs are
+        #              re-indexed when the queue goes idle)
         r = dispatch(pol, 0.0)
         complete(pol, r[0], r[1], 1.0, 1.0)
-        q = pol.get_queue("a")
-        q.iat = 5.0  # TTL = 10
         pol.choose(5.0)
         assert q.state is not QueueState.INACTIVE
         pol.choose(12.0)

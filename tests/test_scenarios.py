@@ -1,0 +1,82 @@
+"""Scenario library + streaming execution path."""
+import itertools
+
+import pytest
+
+from repro.server import ServerConfig, make_server
+from repro.workloads.scenarios import SCENARIOS, make_scenario
+from repro.workloads.traces import make_workload
+
+
+@pytest.mark.parametrize("name", sorted(SCENARIOS))
+def test_scenario_streams_sorted_and_deterministic(name):
+    a = list(make_scenario(name, max_events=300).stream())
+    b = list(make_scenario(name, max_events=300).stream())
+    assert a == b, "same seed must give the same stream"
+    times = [e.time for e in a]
+    assert times == sorted(times)
+    assert all(e.fn_id in make_scenario(name).fns for e in a[:20])
+
+
+def test_scenario_seed_changes_stream():
+    a = list(make_scenario("tenant-hog", max_events=200, seed=0).stream())
+    b = list(make_scenario("tenant-hog", max_events=200, seed=1).stream())
+    assert a != b
+
+
+def test_flash_crowd_bursts():
+    sc = make_scenario("flash-crowd", n_fns=8, duration=400.0,
+                       total_rps=1.0, spike=80.0,
+                       burst_start=100.0, burst_len=50.0)
+    evs = list(sc.stream())
+    in_burst = sum(1 for e in evs if 100.0 <= e.time < 150.0)
+    outside = len(evs) - in_burst
+    # 50s burst window carries more arrivals than the other 350s
+    assert in_burst > outside
+
+
+def test_unknown_scenario_raises():
+    with pytest.raises(ValueError, match="unknown scenario"):
+        make_scenario("nope")
+
+
+def test_run_scenario_through_server_config():
+    cfg = ServerConfig(policy="mqfq-sticky", d=2, metrics="lean",
+                       scenario="azure-longtail",
+                       scenario_kwargs={"n_fns": 16, "total_rps": 2.0,
+                                        "max_events": 400})
+    srv = make_server(cfg)
+    res = srv.run_scenario()
+    assert res.completed_count == 400
+    assert res.invocations == []          # lean: nothing materialized
+    assert res.stats is not None and res.stats.n == 400
+    assert res.p99_latency() >= res.p50_latency() >= 0.0
+    assert sum(res.start_type_counts().values()) == 400
+
+
+def test_streaming_trace_matches_materialized():
+    """run_trace over a generator must be bit-identical to the same
+    events as a list (the lazy arrival pull preserves event order)."""
+    fns, trace = make_workload("azure", n_fns=12, duration=150.0,
+                               trace_id=2)
+
+    def run(tr, metrics):
+        cfg = ServerConfig(policy="mqfq-sticky", d=2, metrics=metrics)
+        return make_server(cfg, fns=fns).run_trace(tr)
+
+    full = run(list(trace), "full")
+    lazy = run(iter(list(trace)), "full")
+    assert ([(i.fn_id, i.start_type, i.completion)
+             for i in full.invocations]
+            == [(i.fn_id, i.start_type, i.completion)
+                for i in lazy.invocations])
+
+    # lean aggregates agree with full recording (reservoir is exact
+    # below its capacity)
+    lean = run(iter(list(trace)), "lean")
+    assert lean.stats.n == sum(1 for i in full.invocations if i.done)
+    assert lean.mean_latency() == pytest.approx(full.mean_latency())
+    assert lean.p99_latency() == pytest.approx(full.p99_latency())
+    assert lean.start_type_counts() == full.start_type_counts()
+    assert lean.mean_utilization() == pytest.approx(
+        full.mean_utilization())

@@ -1,0 +1,127 @@
+"""Differential test: the indexed O(log F) scheduler must be
+bit-identical to the seed's linear-scan reference implementation.
+
+Both implementations replay the same traces through the same
+ControlPlane + SimExecutor (which also schedules TTL timer events off
+``Policy.next_expiry`` for both). We assert the *entire observable
+behavior* matches: the dispatch sequence (invocation id, function,
+device placement, warm/host_warm/cold start type, virtual timestamp),
+the queue-state transition sequence (which drives prefetch/swap in the
+memory layer), and the final RunResult metrics — exact float equality,
+no tolerances.
+
+Covered grid (the paper's policy family and its ablations):
+  policies  mqfq-sticky, mqfq (random candidate), sfq (T=0 ablation),
+            vt_by_service=False ("1.0" VT ablation), deficit_vt
+  T in {0, 10}, D in {1, 4}, plus a tight-memory multi-device config
+  traces    zipf and azure-like, both via the streaming generators
+"""
+import itertools
+
+import pytest
+
+from repro.core.policies import make_policy
+from repro.memory.manager import GB
+from repro.server import ServerConfig, make_server
+from repro.workloads.spec import DEFAULT_MIX, function_copies
+from repro.workloads.traces import azure_trace, zipf_trace
+
+N_FNS = 16
+FNS = function_copies(DEFAULT_MIX, N_FNS)
+TRACES = {
+    "zipf": zipf_trace(FNS, duration=150.0, total_rps=4.0, seed=1),
+    "azure": azure_trace(FNS, duration=200.0, trace_id=3),
+}
+
+
+def replay(policy, trace, **server_kw):
+    cfg = ServerConfig(**server_kw)
+    srv = make_server(cfg, fns=FNS, policy=policy)
+    dispatches, states = [], []
+    srv.bus.on_dispatch(lambda ev: dispatches.append(
+        (ev.inv.inv_id, ev.fn_id, ev.device_id, ev.start_type, ev.time)))
+    srv.bus.on_state_change(lambda ev: states.append(
+        (ev.fn_id, ev.old.value, ev.new.value, ev.time)))
+    res = srv.run_trace(trace)
+    return dispatches, states, res
+
+
+def summarize(res):
+    return {
+        "n": len(res.invocations),
+        "mean": res.mean_latency(),
+        "p50": res.p50_latency(),
+        "p99": res.p99_latency(),
+        "starts": res.start_type_counts(),
+        "per_fn_mean": res.per_fn_mean(),
+        "util": res.mean_utilization(),
+        "gaps": [w.max_gap for w in res.fairness.windows],
+        "pool": (res.pool.cold_starts, res.pool.warm_starts,
+                 res.pool.host_warm_starts, res.pool.evictions),
+    }
+
+
+def assert_equivalent(indexed_name, ref_name, trace_name,
+                      policy_kwargs, **server_kw):
+    trace = TRACES[trace_name]
+    fast = replay(make_policy(indexed_name, **policy_kwargs),
+                  trace, **server_kw)
+    ref = replay(make_policy(ref_name, **policy_kwargs),
+                 trace, **server_kw)
+    for i, (a, b) in enumerate(itertools.zip_longest(fast[0], ref[0])):
+        assert a == b, f"dispatch #{i} diverged: indexed={a} reference={b}"
+    for i, (a, b) in enumerate(itertools.zip_longest(fast[1], ref[1])):
+        assert a == b, f"state change #{i} diverged: {a} vs {b}"
+    assert summarize(fast[2]) == summarize(ref[2])
+
+
+@pytest.mark.parametrize("trace_name", ["zipf", "azure"])
+@pytest.mark.parametrize("T,d", [(0.0, 1), (0.0, 4), (10.0, 1), (10.0, 4)])
+def test_mqfq_sticky_equivalence(trace_name, T, d):
+    assert_equivalent("mqfq-sticky", "ref-mqfq-sticky", trace_name,
+                      {"T": T}, d=d)
+
+
+@pytest.mark.parametrize("trace_name", ["zipf", "azure"])
+@pytest.mark.parametrize("T,d", [(0.0, 1), (10.0, 4)])
+def test_mqfq_random_equivalence(trace_name, T, d):
+    """Plain MQFQ picks a random candidate: identical RNG consumption
+    requires identical candidate lists (content AND order) every call."""
+    assert_equivalent("mqfq", "ref-mqfq", trace_name,
+                      {"T": T, "seed": 7}, d=d)
+
+
+@pytest.mark.parametrize("trace_name", ["zipf", "azure"])
+def test_sfq_ablation_equivalence(trace_name):
+    """Classic SFQ == MQFQ-Sticky at T=0 (strict fairness ablation)."""
+    assert_equivalent("mqfq-sticky", "ref-mqfq-sticky", trace_name,
+                      {"T": 0.0}, d=2)
+
+
+@pytest.mark.parametrize("kwargs", [
+    {"T": 10.0, "vt_by_service": False},   # Fig 8a "1.0" VT ablation
+    {"T": 10.0, "deficit_vt": True},       # beyond-paper VT settle
+    {"T": 10.0, "alpha": 0.5},             # aggressive TTL expiry
+])
+def test_ablation_equivalence(kwargs):
+    assert_equivalent("mqfq-sticky", "ref-mqfq-sticky", "azure", kwargs, d=2)
+
+
+def test_equivalence_under_memory_pressure():
+    """Tight memory forces admission refusals, evictions and host_warm
+    reloads — the queue-state listener order must still match exactly."""
+    assert_equivalent("mqfq-sticky", "ref-mqfq-sticky", "azure",
+                      {"T": 5.0}, d=2, n_devices=2,
+                      capacity_bytes=3 * GB, pool_size=8)
+
+
+def test_equivalence_with_dynamic_d():
+    """Dynamic D flips the sticky tie-break key between calls; both
+    implementations must re-key identically."""
+    assert_equivalent("mqfq-sticky", "ref-mqfq-sticky", "zipf",
+                      {"T": 10.0}, d=3, dynamic_d=True)
+
+
+def test_sfq_policy_registered():
+    assert make_policy("sfq").name == "sfq"
+    assert make_policy("sfq").T == 0.0

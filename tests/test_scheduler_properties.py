@@ -1,0 +1,119 @@
+"""Property-based invariants of the indexed MQFQ-Sticky scheduler under
+randomized arrival / completion / time-advance interleavings (hypothesis,
+guarded import like tests/test_fairness_property.py):
+
+  - Global_VT is monotonically non-decreasing.
+  - choose() never returns a throttled (or empty, or inactive) queue.
+  - Every dispatch respects eligibility: VT < Global_VT + T, or the
+    VT-floor work-conservation exception VT <= Global_VT.
+  - A queue only transitions to INACTIVE after sitting empty + idle for
+    the full anticipatory TTL window (alpha * IAT) — the
+    ACTIVE/THROTTLED -> INACTIVE edge can never skip it.
+  - The indexed scheduler's choice equals the linear-scan reference's
+    under the same op sequence (a second, op-level differential check on
+    adversarial interleavings the trace replays may never hit).
+"""
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st
+
+from repro.core.flow import QueueState
+from repro.core.mqfq import MQFQSticky
+from repro.core.reference import ReferenceMQFQSticky
+from repro.runtime.invocation import Invocation
+
+N_FNS = 4
+
+# one op: (kind, fn, dt, service)
+#   kind 0 = arrival to fn; kind 1 = complete oldest in-flight of fn (if
+#   any, else no-op); kind 2 = pure time advance (TTL pressure)
+ops_strategy = st.lists(
+    st.tuples(st.integers(0, 2), st.integers(0, N_FNS - 1),
+              st.floats(0.0, 8.0, allow_nan=False),
+              st.floats(0.01, 3.0, allow_nan=False)),
+    min_size=5, max_size=60)
+
+
+class Driver:
+    """Applies an op sequence to a policy, dispatching greedily up to a
+    token budget ``d`` like the engine's try_dispatch loop."""
+
+    def __init__(self, pol, d, alpha):
+        self.pol = pol
+        self.d = d
+        pol.device_parallelism = d
+        self.alpha = alpha
+        self.now = 0.0
+        self.inflight = {i: [] for i in range(N_FNS)}
+        self.n_inflight = 0
+        self.chosen = []
+        pol.state_listeners.append(self._on_state)
+        self.ttl_violations = []
+
+    def _on_state(self, q, old, new, now):
+        if new is QueueState.INACTIVE:
+            if q.pending or q.in_flight \
+                    or now - q.last_exec < q.ttl(self.alpha) - 1e-9:
+                self.ttl_violations.append((q.fn_id, old, now, q.last_exec))
+
+    def step(self, op):
+        kind, fn, dt, service = op
+        self.now += dt
+        if kind == 0:
+            self.pol.on_arrival(Invocation(f"f{fn}", self.now), self.now)
+        elif kind == 1 and self.inflight[fn]:
+            q, inv = self.inflight[fn].pop(0)
+            self.n_inflight -= 1
+            inv.service_time = service
+            self.pol.on_complete(q, inv, self.now)
+        # engine-style dispatch loop under the D-token budget
+        while self.n_inflight < self.d:
+            q = self.pol.choose(self.now)
+            self.chosen.append(None if q is None else q.fn_id)
+            if q is None:
+                break
+            yield q                       # caller asserts on the choice
+            inv = q.pop()
+            self.pol.on_dispatch(q, inv, self.now)
+            self.inflight[int(q.fn_id[1:])].append((q, inv))
+            self.n_inflight += 1
+
+
+@settings(max_examples=60, deadline=None)
+@given(ops=ops_strategy, T=st.floats(0.0, 12.0), d=st.integers(1, 3),
+       alpha=st.floats(0.2, 4.0))
+def test_scheduler_invariants(ops, T, d, alpha):
+    pol = MQFQSticky(T=T, alpha=alpha)
+    drv = Driver(pol, d, alpha)
+    last_gvt = pol.global_vt
+    for op in ops:
+        for q in drv.step(op):
+            # never a throttled / empty / inactive queue
+            assert q.state is QueueState.ACTIVE
+            assert len(q) > 0
+            assert not pol._throttled(q)
+            # eligibility (Eq. 1) or the VT-floor exception
+            assert q.vt < pol.global_vt + T or q.vt <= pol.global_vt
+        assert pol.global_vt >= last_gvt, "Global_VT went backwards"
+        last_gvt = pol.global_vt
+    assert not drv.ttl_violations, drv.ttl_violations
+
+
+@settings(max_examples=40, deadline=None)
+@given(ops=ops_strategy, T=st.floats(0.0, 12.0), d=st.integers(1, 3),
+       alpha=st.floats(0.2, 4.0))
+def test_indexed_matches_reference_on_op_sequences(ops, T, d, alpha):
+    fast = Driver(MQFQSticky(T=T, alpha=alpha), d, alpha)
+    ref = Driver(ReferenceMQFQSticky(T=T, alpha=alpha), d, alpha)
+    for op in ops:
+        for _ in fast.step(op):
+            pass
+        for _ in ref.step(op):
+            pass
+        assert fast.chosen == ref.chosen
+        assert fast.pol.global_vt == ref.pol.global_vt
+        for fn, q in fast.pol.queues.items():
+            rq = ref.pol.queues[fn]
+            assert (q.vt, q.state, len(q.pending), q.in_flight) == \
+                (rq.vt, rq.state, len(rq.pending), rq.in_flight), fn
