@@ -17,6 +17,11 @@ python -m benchmarks.scale --sizes 100000 --flows 256 --budget 90
 echo "== scheduler speedup gate: indexed vs reference @ 1k flows =="
 python -m benchmarks.scale --sizes 4000 --flows 1000 --compare 4000
 
+echo "== device-layer speedup gate: indexed vs reference @ 1k flows, memory-pressure sweep =="
+# end-to-end device pipeline (activate->admit->pool->mem->release->idle)
+# across three pressure levels; fails below 5x aggregate speedup
+python -m benchmarks.scale --sizes '' --flows 1000 --device-compare 20000
+
 echo "== smoke: fig6 through repro.server =="
 python -m benchmarks.run --only fig6
 

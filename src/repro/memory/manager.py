@@ -1,4 +1,4 @@
-"""Integrated device-memory management (paper §4.3, Fig. 4).
+"""Integrated device-memory management (paper §4.3, Fig. 4) — indexed.
 
 Queue states drive data placement: Active -> prefetch the function's
 regions to device memory; Throttled/Inactive -> mark evictable and swap
@@ -14,10 +14,27 @@ see DESIGN.md §2):
                   reclaim only under pressure (thrash penalty when over)
   prefetch_swap — paper default: async upload on activation + async LRU
                   swap-out on throttle/inactive
+
+This is the O(log R)-per-miss implementation: ``_evict_lru`` pops
+lazy-invalidation heaps instead of re-sorting every region per miss. The
+seed's linear-scan manager is kept verbatim in ``repro.memory.reference``
+as the executable specification; ``tests/test_memory_equivalence.py``
+proves bit-identical eviction order, admission decisions and byte
+accounting. Two details carry the equivalence:
+
+  - Heap keys are (last_use, creation index): Python's stable sort broke
+    last_use ties by ``regions`` dict order, i.e. region creation order.
+  - When the evictable pool cannot satisfy a request, the reference
+    re-walks its *pre-eviction* resident snapshot — re-counting the
+    regions it just swapped out. ``_evict_resident_sweep`` replays that
+    second pass (including the duplicate accounting) by merging the
+    phase-1 victim list with the resident heap, so the fallback is
+    bug-for-bug identical and still O(log R) per swept region.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+import heapq
+from dataclasses import dataclass
 from typing import Dict, List, Optional, Tuple
 
 GB = 1024 ** 3
@@ -37,6 +54,7 @@ class Region:
     upload_eta: float = -1.0   # >now while async upload in flight
     evictable: bool = False
     last_use: float = 0.0
+    ins: int = 0               # creation index: the stable-sort tie-break
 
 
 class DeviceMemoryManager:
@@ -56,12 +74,18 @@ class DeviceMemoryManager:
         self.bytes_evicted = 0
         self.prefetch_count = 0
         self._used = 0          # running sum of resident region sizes
+        # LRU indices under lazy invalidation (the core/index.py pattern):
+        # entries are (last_use, ins, fn_id) snapshots; writers push fresh
+        # entries whenever a key field changes, readers discard entries
+        # whose snapshot no longer matches the live region.
+        self._evict_heap: List[Tuple[float, int, str]] = []   # resident+evictable
+        self._resident_heap: List[Tuple[float, int, str]] = []  # resident
 
     # -- bookkeeping ------------------------------------------------------
     def region(self, fn_id: str, size: int) -> Region:
         r = self.regions.get(fn_id)
         if r is None:
-            r = Region(fn_id, size)
+            r = Region(fn_id, size, ins=len(self.regions))
             self.regions[fn_id] = r
         if r.size != size:
             if r.resident:
@@ -73,6 +97,34 @@ class DeviceMemoryManager:
         if r.resident != resident:
             self._used += r.size if resident else -r.size
             r.resident = resident
+            if resident:
+                self._reindex(r)
+
+    def _reindex(self, r: Region) -> None:
+        """Push fresh heap entries for a region whose LRU key (residency,
+        evictability, last_use) just changed. Old entries die by
+        validation on pop; compaction bounds heap growth."""
+        if not r.resident:
+            return
+        entry = (r.last_use, r.ins, r.fn_id)
+        heapq.heappush(self._resident_heap, entry)
+        if r.evictable:
+            heapq.heappush(self._evict_heap, entry)
+        if len(self._resident_heap) > self._cap() \
+                or len(self._evict_heap) > self._cap():
+            self._compact()
+
+    def _cap(self) -> int:
+        return 64 + 4 * len(self.regions)
+
+    def _compact(self) -> None:
+        live = [(r.last_use, r.ins, r.fn_id)
+                for r in self.regions.values() if r.resident]
+        self._resident_heap = live
+        heapq.heapify(self._resident_heap)
+        self._evict_heap = [
+            e for e in live if self.regions[e[2]].evictable]
+        heapq.heapify(self._evict_heap)
 
     @property
     def used(self) -> int:
@@ -82,28 +134,87 @@ class DeviceMemoryManager:
         return self.capacity - self._used
 
     # -- eviction -----------------------------------------------------------
+    def _evict_one(self, r: Region) -> None:
+        self._set_resident(r, False)
+        r.upload_eta = -1.0
+        self.bytes_evicted += r.size
+        self._notify_evict(r.fn_id)
+
     def _evict_lru(self, need: int, now: float,
                    protect: Tuple[str, ...] = ()) -> bool:
-        """Free >= need bytes by swapping out evictable (then any idle)
+        """Free >= need bytes by swapping out evictable (then any)
         resident regions in LRU order. Swap-out is async (off the critical
-        path), so capacity is released immediately."""
+        path), so capacity is released immediately. O(log R) per evicted
+        region on the common (evictable-satisfies) path."""
         if self.free_bytes() >= need:
             return True
-        pools = (
-            [r for r in self.regions.values()
-             if r.resident and r.evictable and r.fn_id not in protect],
-            [r for r in self.regions.values()
-             if r.resident and r.fn_id not in protect],
-        )
-        for pool in pools:
-            for r in sorted(pool, key=lambda r: r.last_use):
-                self._set_resident(r, False)
-                r.upload_eta = -1.0
-                self.bytes_evicted += r.size
-                self._notify_evict(r.fn_id)
-                if self.free_bytes() >= need:
-                    return True
-        return self.free_bytes() >= need
+        victims: List[Region] = []
+        skipped: List[Tuple[float, int, str]] = []
+        h = self._evict_heap
+        while self.free_bytes() < need and h:
+            lu, ins, fn = h[0]
+            r = self.regions.get(fn)
+            if r is None or not r.resident or not r.evictable \
+                    or r.last_use != lu:
+                heapq.heappop(h)        # stale
+                continue
+            if fn in protect:
+                skipped.append(heapq.heappop(h))
+                continue
+            heapq.heappop(h)
+            self._evict_one(r)
+            victims.append(r)
+        for e in skipped:
+            heapq.heappush(h, e)
+        if self.free_bytes() >= need:
+            return True
+        return self._evict_resident_sweep(need, victims, protect)
+
+    def _evict_resident_sweep(self, need: int, victims: List[Region],
+                              protect: Tuple[str, ...]) -> bool:
+        """Second pass: the evictable pool could not satisfy the request.
+        The reference walks its resident snapshot taken BEFORE phase 1,
+        so the phase-1 victims are re-processed (their eviction is a
+        residency no-op but the byte accounting and listener callbacks
+        fire again). Replay that snapshot exactly by merging the victim
+        list (already in (last_use, ins) pop order) with the resident
+        heap — O(log R) per swept region instead of re-listing and
+        re-sorting every region."""
+        h = self._resident_heap
+        skipped: List[Tuple[float, int, str]] = []
+        vi = 0
+        ok = False
+        while True:
+            top: Optional[Region] = None
+            while h:
+                lu, ins, fn = h[0]
+                r = self.regions.get(fn)
+                if r is None or not r.resident or r.last_use != lu:
+                    heapq.heappop(h)    # stale
+                    continue
+                if fn in protect:
+                    skipped.append(heapq.heappop(h))
+                    continue
+                top = r
+                break
+            victim = victims[vi] if vi < len(victims) else None
+            if victim is not None and (
+                    top is None
+                    or (victim.last_use, victim.ins) <= (top.last_use,
+                                                         top.ins)):
+                vi += 1
+                self._evict_one(victim)     # duplicate accounting, as in
+            elif top is not None:           # the reference's stale pool2
+                heapq.heappop(h)
+                self._evict_one(top)
+            else:
+                break
+            if self.free_bytes() >= need:
+                ok = True
+                break
+        for e in skipped:
+            heapq.heappush(h, e)
+        return ok or self.free_bytes() >= need
 
     def _notify_evict(self, fn_id: str) -> None:
         for cb in self.evict_listeners:
@@ -130,21 +241,26 @@ class DeviceMemoryManager:
         r = self.regions.get(fn_id)
         if r is None:
             return
+        became_evictable = not r.evictable
         r.evictable = True
         if self.policy == "prefetch_swap":
             # async swap-out; capacity released immediately, write-back
             # is off the critical path
             if r.resident and r.upload_eta <= now:
-                self._set_resident(r, False)
-                self.bytes_evicted += r.size
-                self._notify_evict(r.fn_id)
+                self._evict_one(r)
+                return
+        if became_evictable and r.resident:
+            self._reindex(r)
 
     # -- dispatch-time ---------------------------------------------------------
-    def admit(self, fn_id: str, size: int, running: Dict[str, int],
-              now: float) -> bool:
+    def admit(self, fn_id: str, size: int, running, now: float) -> bool:
         """Memory admission control (§4.4): dispatch only if the working
-        sets of running functions + this one fit physical memory."""
-        reserved = sum(running.values()) + size
+        sets of running functions + this one fit physical memory.
+        ``running`` is the pre-summed distinct-running-function byte count
+        the control plane maintains (O(1)), or the seed's fn_id -> bytes
+        dict."""
+        reserved = (running if isinstance(running, (int, float))
+                    else sum(running.values())) + size
         return reserved <= self.capacity
 
     def acquire(self, fn_id: str, size: int, now: float
@@ -154,7 +270,9 @@ class DeviceMemoryManager:
         multiplier stretches execution for paging-style policies."""
         r = self.region(fn_id, size)
         r.evictable = False
-        r.last_use = now
+        if r.last_use != now:
+            r.last_use = now
+            self._reindex(r)           # fresh LRU key while resident
         mult = 1.0
         if self.policy in ("ondemand", "madvise"):
             # pages migrate on first touch during execution

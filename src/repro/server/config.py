@@ -30,6 +30,17 @@ class ServerConfig:
     pool_size: int = 32
     beta: float = 0.7                # oversubscription stretch (sim only)
     fairness_window: float = 30.0
+    # device layer: "indexed" (heap-indexed O(log N) hot paths) or
+    # "reference" (the seed's linear scans, kept in repro.memory.reference
+    # for differential testing and perf baselines)
+    device_layer: str = "indexed"
+    # batched dispatch (paper §5 dispatcher thread): drain every freed
+    # token / newly-eligible queue per control-plane pass; False runs the
+    # seed's one-try_dispatch-per-call loop (bit-identical sequences)
+    batch_dispatch: bool = True
+    # record a per-stage wall-time breakdown of the dispatch pipeline
+    # (ControlPlane.stage_ns; used by benchmarks/scale.py --stages)
+    profile_stages: bool = False
     # executor: "sim" (virtual clock) or "wallclock" (threads + JAX)
     executor: str = "sim"
     # metrics: "full" records every invocation + utilization sample;

@@ -1,9 +1,8 @@
-"""Clock-agnostic serving control plane (paper Alg. 1 + §4.3-§4.4).
+"""Clock-agnostic serving control plane (paper Alg. 1 + §4.3-§4.4, §5).
 
 ``ControlPlane`` owns every control-plane object — Policy, per-device
-``DeviceMemoryManager`` + D-token ``ConcurrencyController``, the shared
-``WarmPool`` and ``FairnessTracker`` — and implements the full dispatch
-pipeline:
+memory manager + D-token ``ConcurrencyController``, the shared warm pool
+and ``FairnessTracker`` — and implements the full dispatch pipeline:
 
     choose -> pick_device -> admit -> acquire(tokens, container, memory)
            -> classify start_type
@@ -13,18 +12,31 @@ It never reads a clock and never models service time: executors feed it
 the single implementation behind both the discrete-event simulator and
 the wall-clock JAX engine, so every experiment exercises exactly the
 code the real serving path runs.
+
+Dispatch is batched (paper §5 dispatcher thread): ``drain(now)`` runs
+the pipeline repeatedly in one pass, amortizing the per-call setup
+across every freed token / newly-eligible queue, and hands each
+``DispatchDecision`` to the executor's ``realize`` callback *before* the
+next choose so modeled state (device demands) evolves exactly as under
+the seed's one-decision-per-call loop. ``try_dispatch`` remains as the
+single-step shim (``drain(budget=1)``).
+
+The device layer behind the pipeline is selected by
+``ServerConfig.device_layer``: "indexed" (heap-indexed hot paths) or
+"reference" (the seed's linear scans, kept for differential testing and
+perf baselines).
 """
 from __future__ import annotations
 
+import time
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, TYPE_CHECKING
+from typing import Callable, Dict, List, Optional, TYPE_CHECKING
 
 from repro.core.fairness import FairnessTracker
 from repro.core.policy_base import Policy
 from repro.core.tokens import ConcurrencyController
 from repro.core.flow import QueueState
-from repro.memory.manager import DeviceMemoryManager
-from repro.memory.pool import WarmPool
+from repro.memory import make_device_layer
 from repro.runtime.invocation import Invocation
 from repro.server.events import (CompleteEvent, DispatchEvent, EventBus,
                                  StateChangeEvent)
@@ -39,14 +51,39 @@ class DeviceState:
     """One accelerator slice: memory manager + D-token controller +
     in-flight bookkeeping."""
     dev_id: int
-    mem: DeviceMemoryManager
+    mem: object                # DeviceMemoryManager (indexed or reference)
     tokens: ConcurrencyController
     running: Dict[int, str] = field(default_factory=dict)  # inv_id -> fn
     demands: Dict[int, float] = field(default_factory=dict)
     busy_time: float = 0.0
+    # running working set: total mem_bytes over *distinct* running fns
+    # (the admission rule the seed computed by rebuilding a fn -> bytes
+    # dict per dispatch), kept incrementally for O(1) admit
+    running_bytes: int = 0
+    running_fn_count: Dict[str, int] = field(default_factory=dict)
 
     def utilization(self) -> float:
         return min(1.0, sum(self.demands.values()))
+
+    def note_dispatch(self, inv_id: int, fn_id: str, spec: FunctionSpec
+                      ) -> None:
+        self.running[inv_id] = fn_id
+        self.demands[inv_id] = spec.demand
+        n = self.running_fn_count.get(fn_id, 0)
+        if n == 0:
+            self.running_bytes += spec.mem_bytes
+        self.running_fn_count[fn_id] = n + 1
+
+    def note_complete(self, inv_id: int, fn_id: str, spec: FunctionSpec
+                      ) -> None:
+        self.running.pop(inv_id, None)
+        self.demands.pop(inv_id, None)
+        n = self.running_fn_count.get(fn_id, 0) - 1
+        if n <= 0:
+            self.running_fn_count.pop(fn_id, None)
+            self.running_bytes -= spec.mem_bytes
+        else:
+            self.running_fn_count[fn_id] = n
 
 
 @dataclass
@@ -67,12 +104,14 @@ class ControlPlane:
         self.fns = fns
         self.config = config
         self.bus = bus or EventBus()
-        self.pool = WarmPool(config.pool_size)
+        mem_cls, pool_cls = make_device_layer(
+            getattr(config, "device_layer", "indexed"))
+        self.pool = pool_cls(config.pool_size)
         self.devices = [
             DeviceState(i,
-                        DeviceMemoryManager(config.capacity_bytes,
-                                            config.h2d_bw,
-                                            config.mem_policy),
+                        mem_cls(config.capacity_bytes,
+                                config.h2d_bw,
+                                config.mem_policy),
                         ConcurrencyController(max_d=config.d,
                                               dynamic=config.dynamic_d))
             for i in range(config.n_devices)]
@@ -91,6 +130,11 @@ class ControlPlane:
         self._backlogged: set = set()                 # fns with queued/in-flight work
         self._sticky_dev: Dict[str, int] = {}
         self._containers: Dict[int, object] = {}
+        # optional per-stage wall-time breakdown of the dispatch pipeline
+        # (benchmarks/scale.py --stages); off the hot path unless enabled
+        self._profile = getattr(config, "profile_stages", False)
+        self.stage_ns: Dict[str, int] = {
+            "choose": 0, "place": 0, "admit": 0, "pool": 0, "mem": 0}
 
         # queue-state -> memory hooks (MQFQ family); baselines prefetch at
         # arrival and mark evictable at completion-of-last (paper applies
@@ -136,10 +180,40 @@ class ControlPlane:
         return min(free, key=lambda d: len(d.running))
 
     # -- pipeline: dispatch -----------------------------------------------------
+    def drain(self, now: float, budget: Optional[int] = None,
+              realize: Optional[Callable[[DispatchDecision], None]] = None
+              ) -> List[DispatchDecision]:
+        """Batched dispatch (paper §5): run Algorithm 1 DISPATCH until no
+        queue is eligible, no D token is free, or memory admission
+        refuses — one pass over all freed tokens / newly-eligible queues
+        instead of one control-plane call per token.
+
+        ``realize`` is invoked on each decision before the next choose(),
+        so executor-side effects (modeled demands, submitted work) are
+        visible to subsequent decisions exactly as under the seed's
+        per-call loop. ``budget`` caps the number of dispatches (None =
+        drain fully)."""
+        out: List[DispatchDecision] = []
+        while budget is None or len(out) < budget:
+            d = self._dispatch_once(now)
+            if d is None:
+                break
+            out.append(d)
+            if realize is not None:
+                realize(d)
+        return out
+
     def try_dispatch(self, now: float) -> Optional[DispatchDecision]:
-        """One pass of Algorithm 1 DISPATCH. Returns None when nothing is
-        eligible (no candidate queue, no D token, or memory admission
-        refused)."""
+        """Single-step shim over ``drain`` (API compatibility). Returns
+        None when nothing is eligible (no candidate queue, no D token, or
+        memory admission refused)."""
+        out = self.drain(now, budget=1)
+        return out[0] if out else None
+
+    def _dispatch_once(self, now: float) -> Optional[DispatchDecision]:
+        """One pass of Algorithm 1 DISPATCH."""
+        if self._profile:
+            return self._dispatch_once_profiled(now)
         q = self.policy.choose(now)
         if q is None:
             return None
@@ -148,9 +222,7 @@ class ControlPlane:
         dev = self.pick_device(fn_id)
         if dev is None:
             return None  # no D token anywhere (Alg. 1 line 12-13)
-        running_mem = {f: self.fns[f].mem_bytes
-                       for f in dev.running.values()}
-        if not dev.mem.admit(fn_id, spec.mem_bytes, running_mem, now):
+        if not dev.mem.admit(fn_id, spec.mem_bytes, dev.running_bytes, now):
             return None  # memory admission control (§4.4)
         inv = q.pop()
         self.policy.on_dispatch(q, inv, now)
@@ -165,8 +237,53 @@ class ControlPlane:
         inv.dispatch_time = now
         inv.start_type = start_type
         inv.device_id = dev.dev_id
-        dev.running[inv.inv_id] = fn_id
-        dev.demands[inv.inv_id] = spec.demand
+        dev.note_dispatch(inv.inv_id, fn_id, spec)
+        decision = DispatchDecision(inv, dev, spec, start_type, ready,
+                                    mem_mult)
+        self.bus.emit_dispatch(
+            DispatchEvent(inv, fn_id, dev.dev_id, start_type, now))
+        return decision
+
+    def _dispatch_once_profiled(self, now: float
+                                ) -> Optional[DispatchDecision]:
+        """_dispatch_once with per-stage timing (kept as a separate body
+        so the unprofiled hot path pays nothing)."""
+        ns = self.stage_ns
+        t = time.perf_counter_ns()
+        q = self.policy.choose(now)
+        ns["choose"] += time.perf_counter_ns() - t
+        if q is None:
+            return None
+        fn_id = q.fn_id
+        spec = self.fns[fn_id]
+        t = time.perf_counter_ns()
+        dev = self.pick_device(fn_id)
+        ns["place"] += time.perf_counter_ns() - t
+        if dev is None:
+            return None
+        t = time.perf_counter_ns()
+        ok = dev.mem.admit(fn_id, spec.mem_bytes, dev.running_bytes, now)
+        ns["admit"] += time.perf_counter_ns() - t
+        if not ok:
+            return None
+        inv = q.pop()
+        self.policy.on_dispatch(q, inv, now)
+        dev.tokens.acquire()
+        self._sticky_dev[fn_id] = dev.dev_id
+
+        resident = dev.mem.is_resident(fn_id, now)
+        t = time.perf_counter_ns()
+        container, start_type = self.pool.acquire(fn_id, now, resident)
+        ns["pool"] += time.perf_counter_ns() - t
+        self._containers[inv.inv_id] = container
+        t = time.perf_counter_ns()
+        ready, mem_mult = dev.mem.acquire(fn_id, spec.mem_bytes, now)
+        ns["mem"] += time.perf_counter_ns() - t
+
+        inv.dispatch_time = now
+        inv.start_type = start_type
+        inv.device_id = dev.dev_id
+        dev.note_dispatch(inv.inv_id, fn_id, spec)
         decision = DispatchDecision(inv, dev, spec, start_type, ready,
                                     mem_mult)
         self.bus.emit_dispatch(
@@ -176,8 +293,7 @@ class ControlPlane:
     # -- pipeline: completion ----------------------------------------------------
     def on_complete(self, inv: Invocation, now: float) -> None:
         dev = self.devices[inv.device_id]
-        dev.running.pop(inv.inv_id, None)
-        dev.demands.pop(inv.inv_id, None)
+        dev.note_complete(inv.inv_id, inv.fn_id, self.fns[inv.fn_id])
         dev.tokens.release()
         container = self._containers.pop(inv.inv_id)
         self.pool.release(container, now)
@@ -209,7 +325,11 @@ class ControlPlane:
             self.util_samples.append((now, util))
         for d, u in zip(self.devices, utils):
             d.tokens.report_utilization(u)
-        self.policy.device_parallelism = self.devices[0].tokens.current_d
+        # the policy's D-dependent tie-breaks must see the tightest
+        # per-device budget: under dynamic D the devices drift apart, and
+        # syncing from devices[0] alone fed the policy a stale/wrong D
+        self.policy.device_parallelism = min(
+            d.tokens.current_d for d in self.devices)
         self.fairness.maybe_roll(now, self._backlogged,
                                  self.policy.queues.keys())
 

@@ -8,8 +8,14 @@
                         service times are measured, not modeled.
 
 Both call exactly the same ControlPlane methods in the same order per
-event: on_arrival / try_dispatch / on_complete / sample. The ``Server``
-facade fronts whichever executor the config selects.
+event: on_arrival / drain / on_complete / sample. Dispatch is batched
+through ``ControlPlane.drain`` (paper §5: the dispatcher thread services
+every freed token / newly-eligible queue in one pass); each decision is
+realized via callback before the next choose, so the sequence is
+bit-identical to the seed's one-``try_dispatch``-per-call loop (set
+``ServerConfig.batch_dispatch=False`` to run that legacy loop, e.g. for
+the differential tests). The ``Server`` facade fronts whichever executor
+the config selects.
 """
 from __future__ import annotations
 
@@ -54,6 +60,7 @@ class SimExecutor:
         self.stats: Optional[StreamingStats] = \
             StreamingStats() if self.lean else None
         self.events = 0
+        self.batch = getattr(config, "batch_dispatch", True)
         self._heap: List = []
         self._seq = itertools.count()
         self._n_arrived = 0
@@ -98,11 +105,14 @@ class SimExecutor:
                     self.stats.record(payload)
             else:                       # TIMER: queue-state housekeeping
                 self._armed.discard(now)
-            while True:
-                decision = cp.try_dispatch(now)
-                if decision is None:
-                    break
-                self._realize(decision, now)
+            if self.batch:
+                cp.drain(now, realize=lambda d: self._realize(d, now))
+            else:               # legacy per-token loop (differential tests)
+                while True:
+                    decision = cp.try_dispatch(now)
+                    if decision is None:
+                        break
+                    self._realize(decision, now)
             cp.sample(now)
             self._arm_timer(now)
         return RunResult(cp.policy.name, self.invocations, cp.fairness,
@@ -240,19 +250,27 @@ class WallClockExecutor:
     # -- dispatcher ---------------------------------------------------------------
     def _run(self) -> None:
         while not self._stop.is_set():
-            dispatched = self._try_dispatch()
+            dispatched = self._dispatch_batch()
             if not dispatched:
                 self._wake.wait(timeout=0.05)
                 self._wake.clear()
 
-    def _try_dispatch(self) -> bool:
+    def _dispatch_batch(self) -> bool:
+        """One dispatcher-thread pass (paper §5): drain every dispatchable
+        invocation under a single lock acquisition instead of re-taking
+        the lock (and re-entering the control plane) once per token."""
+        def realize(decision) -> None:
+            self._inflight += 1
+            self._pool.submit(self._execute, decision)
+
         with self._lock:
+            if getattr(self.config, "batch_dispatch", True):
+                return bool(self.control.drain(self.now(), realize=realize))
             decision = self.control.try_dispatch(self.now())
             if decision is None:
                 return False
-            self._inflight += 1
-        self._pool.submit(self._execute, decision)
-        return True
+            realize(decision)
+            return True
 
     def _execute(self, d: DispatchDecision) -> None:
         inv = d.inv

@@ -13,7 +13,6 @@ from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
 
 from repro.core.fairness import FairnessTracker
-from repro.memory.pool import WarmPool
 from repro.runtime.invocation import Invocation
 
 
@@ -67,7 +66,7 @@ class RunResult:
     policy: str
     invocations: List[Invocation]
     fairness: FairnessTracker
-    pool: WarmPool
+    pool: object             # WarmPool (indexed or reference layer)
     util_samples: List[Tuple[float, float]]
     devices: List            # List[DeviceState]
     duration: float

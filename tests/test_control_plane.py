@@ -1,0 +1,150 @@
+"""Control-plane unit tests: batched ``drain`` semantics, O(1) admission
+accounting, and the dynamic-D policy-sync regression."""
+import pytest
+
+from repro.memory import GB
+from repro.runtime.invocation import Invocation
+from repro.server import ServerConfig, make_server
+from repro.workloads.spec import FunctionSpec
+
+
+def _server(**kw):
+    fns = {f: FunctionSpec(f, warm_time=1.0, cold_init=0.5,
+                           mem_bytes=1 * GB, demand=0.3)
+           for f in ("f0", "f1", "f2")}
+    cfg = ServerConfig(policy="mqfq-sticky", policy_kwargs={"T": 10.0},
+                       **kw)
+    return make_server(cfg, fns=fns)
+
+
+def _arrive(cp, fn_id, now, inv_id):
+    inv = Invocation(fn_id, now, inv_id=inv_id)
+    cp.on_arrival(inv, now)
+    return inv
+
+
+class TestDrain:
+    def test_drain_dispatches_all_eligible_in_one_pass(self):
+        cp = _server(d=4, n_devices=1).control
+        for i, f in enumerate(["f0", "f1", "f2"]):
+            _arrive(cp, f, 0.0, i)
+        decisions = cp.drain(0.0)
+        assert len(decisions) == 3
+        assert cp.total_inflight == 3
+        assert cp.drain(0.0) == []          # nothing left
+
+    def test_budget_caps_the_batch(self):
+        cp = _server(d=4, n_devices=1).control
+        for i, f in enumerate(["f0", "f1", "f2"]):
+            _arrive(cp, f, 0.0, i)
+        assert len(cp.drain(0.0, budget=2)) == 2
+        assert len(cp.drain(0.0)) == 1      # remainder
+
+    def test_try_dispatch_is_a_single_step_shim(self):
+        cp = _server(d=4, n_devices=1).control
+        _arrive(cp, "f0", 0.0, 0)
+        d = cp.try_dispatch(0.0)
+        assert d is not None and d.inv.inv_id == 0
+        assert cp.try_dispatch(0.0) is None
+
+    def test_realize_callback_runs_between_decisions(self):
+        cp = _server(d=4, n_devices=1).control
+        for i, f in enumerate(["f0", "f1", "f2"]):
+            _arrive(cp, f, 0.0, i)
+        seen = []
+        cp.drain(0.0, realize=lambda d: seen.append(
+            (d.inv.inv_id, cp.total_inflight)))
+        # each callback observes the control-plane state *at* its dispatch
+        assert [n for _, n in seen] == [1, 2, 3]
+
+    def test_drain_stops_at_token_limit(self):
+        cp = _server(d=2, n_devices=1).control
+        for i in range(5):
+            _arrive(cp, "f0", 0.0, i)
+        assert len(cp.drain(0.0)) == 2      # D tokens exhausted
+
+
+class TestStageProfiling:
+    def test_profiled_dispatch_matches_unprofiled(self):
+        """Drift guard: _dispatch_once_profiled duplicates the pipeline
+        body with timers interleaved — an edit applied to only one twin
+        must fail here."""
+        from repro.server import ServerConfig, make_server
+        from repro.workloads.spec import DEFAULT_MIX, function_copies
+        from repro.workloads.traces import zipf_trace
+
+        fns = function_copies(DEFAULT_MIX, 8)
+        trace = zipf_trace(fns, duration=60.0, total_rps=4.0, seed=3)
+        logs = {}
+        for profiled in (False, True):
+            cfg = ServerConfig(policy="mqfq-sticky",
+                               policy_kwargs={"T": 5.0}, d=2,
+                               capacity_bytes=3 * GB, pool_size=8,
+                               profile_stages=profiled)
+            srv = make_server(cfg, fns=fns)
+            log = []
+            srv.bus.on_dispatch(lambda ev, log=log: log.append(
+                (ev.inv.inv_id, ev.fn_id, ev.device_id, ev.start_type,
+                 ev.time)))
+            srv.run_trace(trace)
+            logs[profiled] = log
+            if profiled:
+                assert sum(srv.control.stage_ns.values()) > 0
+            else:
+                assert sum(srv.control.stage_ns.values()) == 0
+        assert logs[True] == logs[False]
+
+
+class TestAdmissionCounter:
+    def test_running_bytes_counts_distinct_fns(self):
+        """The seed rebuilt a fn -> bytes dict per dispatch, so two
+        running invocations of one fn counted its bytes once. The O(1)
+        counter must keep those semantics."""
+        cp = _server(d=4, n_devices=1, capacity_bytes=16 * GB).control
+        invs = [_arrive(cp, "f0", 0.0, 0), _arrive(cp, "f0", 0.0, 1),
+                _arrive(cp, "f1", 0.0, 2)]
+        decisions = cp.drain(0.0)
+        assert len(decisions) == 3
+        dev = cp.devices[0]
+        assert dev.running_bytes == 2 * GB      # f0 once + f1 once
+        for d in decisions[:2]:                 # complete both f0 runs
+            d.inv.service_time = 1.0
+            d.inv.completion = 1.0
+            cp.on_complete(d.inv, 1.0)
+        assert dev.running_bytes == 1 * GB      # f1 still running
+        d = decisions[2]
+        d.inv.service_time = 1.0
+        d.inv.completion = 1.0
+        cp.on_complete(d.inv, 1.0)
+        assert dev.running_bytes == 0
+        assert dev.running_fn_count == {}
+        assert invs[0].start_type == "cold"
+
+    def test_admission_refusal_matches_capacity_rule(self):
+        cp = _server(d=4, n_devices=1, capacity_bytes=2 * GB).control
+        for i, f in enumerate(["f0", "f1", "f2"]):
+            _arrive(cp, f, 0.0, i)
+        # 1 GB regions, 2 GB capacity: third dispatch must be refused
+        assert len(cp.drain(0.0)) == 2
+
+
+class TestDynamicDSync:
+    def test_policy_sees_min_current_d_across_devices(self):
+        """Regression: sample() synced policy.device_parallelism from
+        devices[0] only, so with n_devices > 1 under dynamic D the policy
+        tie-break saw a stale/wrong budget."""
+        cp = _server(d=3, n_devices=2, dynamic_d=True).control
+        for dev in cp.devices:          # freeze the controllers so the
+            dev.tokens.dynamic = False  # values below stick
+        cp.devices[0].tokens.current_d = 3
+        cp.devices[1].tokens.current_d = 1
+        cp.sample(0.0)
+        assert cp.policy.device_parallelism == 1
+        cp.devices[1].tokens.current_d = 2
+        cp.sample(1.0)
+        assert cp.policy.device_parallelism == 2
+
+    def test_static_d_unchanged(self):
+        cp = _server(d=2, n_devices=2).control
+        cp.sample(0.0)
+        assert cp.policy.device_parallelism == 2

@@ -63,11 +63,18 @@ def summarize(res):
 
 def assert_equivalent(indexed_name, ref_name, trace_name,
                       policy_kwargs, **server_kw):
+    """The indexed scheduler runs on the full indexed stack (indexed
+    device layer, batched drain); the reference scheduler runs the seed's
+    stack (reference device layer, one try_dispatch per call) — so every
+    equivalence case differentials the whole dispatch pipeline, not just
+    the policy core."""
     trace = TRACES[trace_name]
     fast = replay(make_policy(indexed_name, **policy_kwargs),
-                  trace, **server_kw)
+                  trace, device_layer="indexed", batch_dispatch=True,
+                  **server_kw)
     ref = replay(make_policy(ref_name, **policy_kwargs),
-                 trace, **server_kw)
+                 trace, device_layer="reference", batch_dispatch=False,
+                 **server_kw)
     for i, (a, b) in enumerate(itertools.zip_longest(fast[0], ref[0])):
         assert a == b, f"dispatch #{i} diverged: indexed={a} reference={b}"
     for i, (a, b) in enumerate(itertools.zip_longest(fast[1], ref[1])):
@@ -107,11 +114,14 @@ def test_ablation_equivalence(kwargs):
     assert_equivalent("mqfq-sticky", "ref-mqfq-sticky", "azure", kwargs, d=2)
 
 
-def test_equivalence_under_memory_pressure():
+@pytest.mark.parametrize("mem_policy", ["ondemand", "madvise", "prefetch",
+                                        "prefetch_swap"])
+def test_equivalence_under_memory_pressure(mem_policy):
     """Tight memory forces admission refusals, evictions and host_warm
-    reloads — the queue-state listener order must still match exactly."""
+    reloads — the queue-state listener order must still match exactly,
+    under every Fig.-4 memory policy."""
     assert_equivalent("mqfq-sticky", "ref-mqfq-sticky", "azure",
-                      {"T": 5.0}, d=2, n_devices=2,
+                      {"T": 5.0}, d=2, n_devices=2, mem_policy=mem_policy,
                       capacity_bytes=3 * GB, pool_size=8)
 
 
