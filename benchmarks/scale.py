@@ -1,12 +1,15 @@
-"""Scale sweep: scheduler + device-layer throughput and memory from 10k
-to 1M invocations (acceptance benchmarks for the indexed O(log F) core
-and the indexed O(log N) device layer).
+"""Scale sweep: scheduler + device-layer + event-loop throughput and
+memory from 10k to 1M invocations (acceptance benchmarks for the indexed
+O(log F) core, the indexed O(log N) device layer and the
+transition-driven control plane).
 
     PYTHONPATH=src python -m benchmarks.scale \
         --sizes 10000,100000,1000000 --flows 1000 [--mem] [--budget 300]
     PYTHONPATH=src python -m benchmarks.scale --compare 4000 --flows 1000
     PYTHONPATH=src python -m benchmarks.scale --sizes '' --flows 1000 \
         --device-compare 3000 [--stages]
+    PYTHONPATH=src python -m benchmarks.scale --sizes 4000 --flows 1000 \
+        --sampling-compare 4000 [--event-profile 4000]
 
 Replays an ``azure-longtail`` streaming scenario (no materialized event
 list) through the SimExecutor with ``metrics="lean"`` (no materialized
@@ -31,23 +34,80 @@ across the sweep is the ">= 5x at 1k flows" acceptance gate. With
 scenario with ``ControlPlane`` stage profiling, showing the in-system
 effect (there the shared event loop and scheduler dilute the ratio).
 
+``--sampling-compare N`` is the event-loop gate: N invocations through
+the transition-driven control plane (``sampling="transition"``) vs the
+retained pre-PR per-event reference (``sampling="per_event"``),
+interleaved pairs, median-of-pairs ratio (perf gates are load-sensitive;
+medians reject transient spikes). NOTE the reference mode restores the
+pre-PR *control-plane* behavior (per-event device scans, unconditional
+event construction + maybe_roll + EMA, drain closures, list-building
+device picker, unguarded deferred scan, unbounded timer peek) but still
+inherits this PR's structural wins (slotted records, embedded-ref
+indices, the rewritten state machine, tuple trace events), so the
+in-binary ratio *understates* the true speedup: measured against the
+actual pre-PR commit this change took 1k-flow throughput from ~45k to
+~80-90k decisions/s (~2x, see BENCH_scale.json). The gate therefore
+enforces SAMPLING_SPEEDUP_MIN on the in-binary ratio.
+
+``--event-profile N`` prints the per-event fixed-cost breakdown (heap /
+arrival / complete / dispatch / sample / timer / bus, via
+``SimExecutor.run_profiled``) for both sampling modes — the "where did
+the time go" table.
+
+Every invocation appends a machine-readable record (decisions/s, RSS,
+speedup ratios, git SHA, timestamp) to ``BENCH_scale.json`` at the repo
+root, so the perf trajectory across PRs stays visible.
+
 ``--budget S`` exits non-zero if any sweep point exceeds S wall-clock
-seconds (CI scale smoke).
+seconds (CI scale smoke). All speedup gates honor ``CI_SPEEDUP_SLACK``
+(fractional headroom for loaded machines, e.g. 0.2 lowers each
+threshold by 20%).
 """
 from __future__ import annotations
 
 import argparse
+import json
+import os
 import resource
+import subprocess
 import sys
 import time
 import tracemalloc
 
 from benchmarks.common import Bench
 
+# acceptance thresholds (pre-slack): indexed-vs-reference scheduler,
+# indexed-vs-reference device layer, transition-vs-per_event control
+# plane (see the --sampling-compare note above for why the last is below
+# the ~2x-vs-pre-PR-commit headline)
+SCHED_SPEEDUP_MIN = 10.0
+DEVICE_SPEEDUP_MIN = 5.0
+SAMPLING_SPEEDUP_MIN = 1.3
+BENCH_JSON = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "BENCH_scale.json")
+
+
+def _slack() -> float:
+    """CI_SPEEDUP_SLACK: fractional threshold headroom (loaded machine)."""
+    try:
+        return max(0.0, min(0.9, float(
+            os.environ.get("CI_SPEEDUP_SLACK", "0"))))
+    except ValueError:
+        return 0.0
+
+
+def _gate(value: float, minimum: float, what: str, failures: list) -> None:
+    eff = minimum * (1.0 - _slack())
+    if value < eff:
+        failures.append(f"{what} {value:.2f}x below the {eff:.2f}x "
+                        f"threshold (min {minimum}x, slack {_slack():g})")
+
 
 def run_once(size: int, flows: int, policy: str, seed: int = 0,
              mem: bool = False, total_rps=2.5, device_layer: str = "indexed",
-             pressure: bool = False, stages: bool = False) -> dict:
+             pressure: bool = False, stages: bool = False,
+             sampling: str = "transition", profile_events: bool = False
+             ) -> dict:
     from repro.memory.manager import GB
     from repro.server import ServerConfig, make_server
 
@@ -76,6 +136,7 @@ def run_once(size: int, flows: int, policy: str, seed: int = 0,
     cfg = ServerConfig(
         policy=policy, policy_kwargs={"T": 10.0} if takes_T else {},
         metrics="lean", device_layer=device_layer, profile_stages=stages,
+        sampling=sampling,
         scenario="azure-longtail",
         scenario_kwargs={"n_fns": flows, "scale": 10.0,
                          "total_rps": total_rps,
@@ -85,7 +146,10 @@ def run_once(size: int, flows: int, policy: str, seed: int = 0,
     if mem:
         tracemalloc.start()
     t0 = time.perf_counter()
-    res = srv.run_scenario()
+    if profile_events:
+        res = srv.executor.run_profiled(srv.scenario.stream())
+    else:
+        res = srv.run_scenario()
     wall = time.perf_counter() - t0
     peak_py = 0
     if mem:
@@ -97,9 +161,12 @@ def run_once(size: int, flows: int, policy: str, seed: int = 0,
     if stages:
         row_stages = {f"stage_{k}_s": round(v / 1e9, 4)
                       for k, v in srv.control.stage_ns.items()}
+    if profile_events:
+        row_stages.update({f"event_{k}_us": round(v / events / 1e3, 3)
+                           for k, v in srv.executor.event_ns.items()})
     return {
         "policy": policy, "invocations": size, "flows": flows,
-        "device_layer": device_layer,
+        "device_layer": device_layer, "sampling": sampling,
         "wall_s": round(wall, 3),
         **row_stages,
         "decisions": decisions,
@@ -189,11 +256,21 @@ def main(argv=None) -> None:
                     help="fail if any point exceeds this many wall seconds")
     ap.add_argument("--compare", type=int, default=0, metavar="N",
                     help="also run N invocations through the linear-scan "
-                         "reference scheduler and report the speedup")
+                         "reference scheduler and report the speedup "
+                         "(median of 3 interleaved pairs)")
     ap.add_argument("--device-compare", type=int, default=0, metavar="N",
                     help="device-layer microbenchmark: N invocations under "
                          "memory pressure, indexed vs reference device "
-                         "layer (indexed scheduler core on both sides)")
+                         "layer (indexed scheduler core on both sides; "
+                         "median of 3 per point)")
+    ap.add_argument("--sampling-compare", type=int, default=0, metavar="N",
+                    help="event-loop gate: N invocations, transition vs "
+                         "per_event control plane, median of 3 "
+                         "interleaved pair ratios")
+    ap.add_argument("--event-profile", type=int, default=0, metavar="N",
+                    help="per-event fixed-cost breakdown (sample / timer "
+                         "/ bus / heap / dispatch / handlers) for both "
+                         "sampling modes over N invocations")
     ap.add_argument("--stages", action="store_true",
                     help="with --device-compare: per-stage dispatch-"
                          "pipeline breakdown -> results/bench/"
@@ -202,10 +279,14 @@ def main(argv=None) -> None:
 
     bench = Bench("scale")
     over_budget = []
+    failures: list = []
+    speedups: dict = {}
+    headline: list = []
     print("name,us_per_call,derived")
     for size in [int(s) for s in args.sizes.split(",") if s]:
         row = run_once(size, args.flows, args.policy, args.seed, args.mem)
         bench.add(**row)
+        headline.append(row)
         print(f"# scale {size:>9} inv / {args.flows} flows: "
               f"{row['wall_s']:8.2f}s  "
               f"{row['decisions_per_s']:>10.0f} decisions/s  "
@@ -213,24 +294,33 @@ def main(argv=None) -> None:
         if args.budget and row["wall_s"] > args.budget:
             over_budget.append((size, row["wall_s"]))
 
-    speedup = None
     if args.compare:
         if args.policy not in ("mqfq", "mqfq-sticky"):
             raise SystemExit("--compare needs a policy with a retained "
                              "reference twin: mqfq or mqfq-sticky")
-        fast = run_once(args.compare, args.flows, args.policy, args.seed,
-                        total_rps=None)
-        ref = run_once(args.compare, args.flows, "ref-" + args.policy,
-                       args.seed, total_rps=None)
-        bench.add(**fast)
-        bench.add(**ref)
-        speedup = fast["decisions_per_s"] / max(ref["decisions_per_s"], 1e-9)
+        # median of 3 interleaved pairs: perf gates are load-sensitive,
+        # and a background spike during either side of a single pair
+        # produces a bogus ratio; the median pair rejects it
+        ratios = []
+        for _ in range(3):
+            fast = run_once(args.compare, args.flows, args.policy,
+                            args.seed, total_rps=None)
+            ref = run_once(args.compare, args.flows, "ref-" + args.policy,
+                           args.seed, total_rps=None)
+            bench.add(**fast)
+            bench.add(**ref)
+            ratios.append((fast["decisions_per_s"]
+                           / max(ref["decisions_per_s"], 1e-9),
+                           fast, ref))
+        ratios.sort(key=lambda r: r[0])
+        speedup, fast, ref = ratios[1]
+        speedups["scheduler_indexed_vs_reference"] = round(speedup, 2)
         print(f"# indexed vs reference @ {args.flows} flows, "
               f"{args.compare} inv: {fast['decisions_per_s']:.0f} vs "
               f"{ref['decisions_per_s']:.0f} decisions/s "
-              f"({speedup:.1f}x)", file=sys.stderr)
+              f"({speedup:.1f}x median-of-3)", file=sys.stderr)
+        _gate(speedup, SCHED_SPEEDUP_MIN, "scheduler speedup", failures)
 
-    dev_speedup = None
     if args.device_compare:
         # memory-pressure sweep: capacity from ~0.3% to ~6% of the 1k-flow
         # long-tail working set (~1.1 GB/fn mean)
@@ -238,13 +328,14 @@ def main(argv=None) -> None:
         totals = {"indexed": 0.0, "reference": 0.0}
         for capacity_gb in (4, 16, 64):
             for layer in ("indexed", "reference"):
-                # best-of-2: the op stream is deterministic, so the
-                # spread is scheduler noise — keep the cleaner run
-                row = min((device_pipeline_once(layer, args.flows,
-                                                args.device_compare,
-                                                capacity_gb, args.seed)
-                           for _ in range(2)),
-                          key=lambda r: r["wall_s"])
+                # median-of-3: the op stream is deterministic, so the
+                # spread is machine noise — take the middle run
+                runs = sorted((device_pipeline_once(layer, args.flows,
+                                                    args.device_compare,
+                                                    capacity_gb, args.seed)
+                               for _ in range(3)),
+                              key=lambda r: r["wall_s"])
+                row = runs[1]
                 sweep_rows.append(row)
                 bench.add(**row)
                 totals[layer] += row["wall_s"]
@@ -254,12 +345,15 @@ def main(argv=None) -> None:
                   f"{b:6.2f}s  ({b / max(a, 1e-9):4.1f}x)",
                   file=sys.stderr)
         dev_speedup = totals["reference"] / max(totals["indexed"], 1e-9)
+        speedups["device_layer_indexed_vs_reference"] = round(dev_speedup, 2)
         print(f"# device layer indexed vs reference @ {args.flows} flows, "
               f"{args.device_compare} dispatch cycles x 3 pressure "
               f"levels: {totals['indexed']:.2f}s vs "
-              f"{totals['reference']:.2f}s ({dev_speedup:.1f}x)",
-              file=sys.stderr)
+              f"{totals['reference']:.2f}s ({dev_speedup:.1f}x "
+              f"median-of-3 per point)", file=sys.stderr)
         _emit_stage_breakdown(sweep_rows)
+        _gate(dev_speedup, DEVICE_SPEEDUP_MIN, "device-layer speedup",
+              failures)
         if args.stages:
             # in-simulator view: the same comparison inside the full
             # control plane + SimExecutor (diluted by shared event-loop /
@@ -277,15 +371,115 @@ def main(argv=None) -> None:
                 print(f"# in-sim [{layer:9s}] wall={row['wall_s']:.2f}s  "
                       f"{parts}", file=sys.stderr)
 
+    if args.sampling_compare:
+        ratios = []
+        for _ in range(3):
+            fast = run_once(args.sampling_compare, args.flows, args.policy,
+                            args.seed, sampling="transition")
+            ref = run_once(args.sampling_compare, args.flows, args.policy,
+                           args.seed, sampling="per_event")
+            bench.add(**fast)
+            bench.add(**ref)
+            ratios.append((fast["decisions_per_s"]
+                           / max(ref["decisions_per_s"], 1e-9),
+                           fast, ref))
+        ratios.sort(key=lambda r: r[0])
+        s_speedup, fast, ref = ratios[1]
+        speedups["transition_vs_per_event"] = round(s_speedup, 2)
+        print(f"# transition vs per_event @ {args.flows} flows, "
+              f"{args.sampling_compare} inv: "
+              f"{fast['decisions_per_s']:.0f} vs "
+              f"{ref['decisions_per_s']:.0f} decisions/s "
+              f"({s_speedup:.2f}x median-of-3; the per_event reference "
+              f"shares this PR's structural wins — vs the actual pre-PR "
+              f"commit the jump is ~2x, see BENCH_scale.json)",
+              file=sys.stderr)
+        _gate(s_speedup, SAMPLING_SPEEDUP_MIN, "event-loop speedup",
+              failures)
+
+    if args.event_profile:
+        _event_profile(args, bench)
+
     bench.emit()
-    if speedup is not None and speedup < 10.0:
-        raise SystemExit(f"speedup {speedup:.1f}x below the 10x target")
-    if dev_speedup is not None and dev_speedup < 5.0:
-        raise SystemExit(f"device-layer speedup {dev_speedup:.1f}x below "
-                         f"the 5x target")
+    _append_bench_json(args, headline, speedups)
     if over_budget:
-        raise SystemExit(f"over wall-clock budget {args.budget}s: "
-                         f"{over_budget}")
+        failures.append(f"over wall-clock budget {args.budget}s: "
+                        f"{over_budget}")
+    if failures:
+        raise SystemExit("; ".join(failures))
+
+
+PROFILE_SEGMENTS = ("heap", "arrival", "complete", "dispatch", "sample",
+                    "timer", "bus")
+
+
+def _event_profile(args, bench) -> None:
+    """Per-event fixed-cost table (us/event per loop segment), both
+    sampling modes side by side."""
+    rows = {}
+    for mode in ("per_event", "transition"):
+        row = run_once(args.event_profile, args.flows, args.policy,
+                       args.seed, sampling=mode, profile_events=True)
+        bench.add(**row)
+        rows[mode] = row
+    print(f"# per-event cost (us/event) @ {args.flows} flows, "
+          f"{args.event_profile} inv:", file=sys.stderr)
+    print(f"# {'segment':9s} {'per_event':>10s} {'transition':>11s}",
+          file=sys.stderr)
+    for seg in PROFILE_SEGMENTS:
+        a = rows["per_event"].get(f"event_{seg}_us", 0.0)
+        b = rows["transition"].get(f"event_{seg}_us", 0.0)
+        print(f"# {seg:9s} {a:10.2f} {b:11.2f}", file=sys.stderr)
+    tot = {m: sum(rows[m].get(f"event_{s}_us", 0.0)
+                  for s in PROFILE_SEGMENTS if s != "bus")
+           for m in rows}
+    print(f"# {'total':9s} {tot['per_event']:10.2f} "
+          f"{tot['transition']:11.2f}   (bus is a subset of "
+          f"dispatch/handlers)", file=sys.stderr)
+
+
+def _git_sha() -> str:
+    try:
+        return subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"],
+            cwd=os.path.dirname(BENCH_JSON), capture_output=True,
+            text=True, timeout=10).stdout.strip() or "unknown"
+    except Exception:
+        return "unknown"
+
+
+def _append_bench_json(args, headline: list, speedups: dict) -> None:
+    """Persist the perf trajectory: one record per benchmark invocation,
+    appended to BENCH_scale.json at the repo root so regressions across
+    PRs are visible in review diffs."""
+    record = {
+        "git_sha": _git_sha(),
+        "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S%z"),
+        "argv": " ".join(sys.argv[1:]),
+        "flows": args.flows,
+        "policy": args.policy,
+        "rows": [
+            {"invocations": r["invocations"], "sampling": r["sampling"],
+             "wall_s": r["wall_s"],
+             "decisions_per_s": r["decisions_per_s"],
+             "events_per_s": r["events_per_s"],
+             "ru_maxrss_mb": r["ru_maxrss_mb"]}
+            for r in headline],
+        "speedups": speedups,
+        "ci_speedup_slack": _slack(),
+    }
+    history = []
+    if os.path.exists(BENCH_JSON):
+        try:
+            with open(BENCH_JSON) as f:
+                history = json.load(f)
+        except (ValueError, OSError):
+            history = []
+    history.append(record)
+    with open(BENCH_JSON, "w") as f:
+        json.dump(history, f, indent=2)
+        f.write("\n")
+    print(f"# perf record appended -> {BENCH_JSON}", file=sys.stderr)
 
 
 def _emit_stage_breakdown(rows: list) -> None:

@@ -1,6 +1,20 @@
 #!/usr/bin/env bash
 # CI gate: tier-1 test suite + scale smoke + a smoke benchmark through
 # the unified control-plane API. Run from the repo root.
+#
+# PERF GATES ARE LOAD-SENSITIVE: the speedup gates below compare wall
+# times of sub-second runs, so a busy machine (parallel CI jobs, another
+# build, a browser) skews ratios by 2x or more. Run this script ALONE on
+# an otherwise idle machine. Every speedup gate takes the median of 3
+# interleaved runs (a spike during one pair no longer fails the build)
+# and honors CI_SPEEDUP_SLACK — a fractional headroom for machines that
+# are known-noisy, e.g.:
+#
+#     CI_SPEEDUP_SLACK=0.2 scripts/ci.sh    # all thresholds -20%
+#
+# Each benchmarks.scale invocation also appends its numbers (decisions/s,
+# RSS, ratios, git SHA, timestamp) to BENCH_scale.json at the repo root —
+# the cross-PR perf trajectory; review its diff like any other change.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -14,10 +28,19 @@ echo "== scale smoke: 100k-invocation streaming azure trace =="
 # point exceeds the wall-clock budget (scheduler perf regression gate)
 python -m benchmarks.scale --sizes 100000 --flows 256 --budget 90
 
-echo "== scheduler speedup gate: indexed vs reference @ 1k flows =="
+echo "== scheduler speedup gate: indexed vs reference @ 1k flows (median-of-3) =="
 python -m benchmarks.scale --sizes 4000 --flows 1000 --compare 4000
 
-echo "== device-layer speedup gate: indexed vs reference @ 1k flows, memory-pressure sweep =="
+echo "== event-loop speedup gate: transition vs per_event control plane @ 1k flows (median-of-3) =="
+# the PR-4 gate: the transition-driven control plane against the
+# retained pre-PR per-event reference (ServerConfig.sampling). The
+# in-binary reference still inherits the PR's structural wins (slotted
+# records, embedded-ref indices, rewritten state machine), so the gated
+# ratio (>= 1.3x) understates the jump vs the actual pre-PR commit
+# (~45k -> ~76-85k decisions/s, ~1.7-1.9x; see BENCH_scale.json).
+python -m benchmarks.scale --sizes 4000 --flows 1000 --sampling-compare 4000
+
+echo "== device-layer speedup gate: indexed vs reference @ 1k flows, memory-pressure sweep (median-of-3 per point) =="
 # end-to-end device pipeline (activate->admit->pool->mem->release->idle)
 # across three pressure levels; fails below 5x aggregate speedup
 python -m benchmarks.scale --sizes '' --flows 1000 --device-compare 20000

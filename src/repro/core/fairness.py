@@ -29,7 +29,14 @@ class FairnessTracker:
     event) instead of re-observing every flow after every event (the
     seed's O(F)-per-event scan, which dominated at thousands of flows).
     A flow qualifies for a window's bound iff it was never seen
-    non-backlogged between the window's start and its roll."""
+    non-backlogged between the window's start and its roll.
+
+    Per-event hot paths gate ``maybe_roll`` behind the roll deadline
+    instead of paying the call every event. The gate MUST use the exact
+    expression of maybe_roll's own guard — ``now - _t0 >= window`` —
+    never a precomputed ``now >= _t0 + window``: float(t0 + w) can round
+    one ulp away from the subtraction form, silently skipping (or
+    double-testing) a roll. See ``ControlPlane._sample_transition``."""
 
     def __init__(self, window: float = 30.0, T: float = 10.0, D: int = 2,
                  record_service: bool = True):

@@ -22,10 +22,11 @@ class QueueState(enum.Enum):
     INACTIVE = "inactive"
 
 
-@dataclass
-class FlowQueue:
-    fn_id: str
-    weight: float = 1.0
+@dataclass(slots=True, eq=False)   # identity semantics: queues are
+class FlowQueue:                   # stateful singletons per fn_id, and the
+    fn_id: str                     # scheduler index embeds them in heap
+    weight: float = 1.0            # entries (identity ==/hash keeps tuple
+                                   # tie-compares O(1) and queues set-able)
     # creation index (dict order): SchedulerIndex uses it to reproduce the
     # reference scheduler's stable-sort / dict-iteration tie-breaking
     ins: int = 0
@@ -75,7 +76,7 @@ class FlowQueue:
         # VT advances by the *expected* service (tau_k / weight); shorter
         # functions therefore get more invocations per unit VT (paper §4.2).
         self.vt += self.tau / self.weight
-        inv.charged_tau = self.tau  # type: ignore[attr-defined]
+        inv.charged_tau = self.tau
         self.in_flight += 1
         self.dispatched += 1
         self.last_exec = now
@@ -86,7 +87,9 @@ class FlowQueue:
         self.last_exec = now
         self.total_service += service_time
         if self.deficit_vt:
-            charged = getattr(inv, "charged_tau", service_time)
+            charged = inv.charged_tau
+            if charged is None:         # never dispatched through a queue
+                charged = service_time
             self.vt += (service_time - charged) / self.weight
         self._tau_n += 1
         if self._tau_n == 1:

@@ -9,6 +9,14 @@ under *lazy invalidation*: entries carry snapshots of the fields they
 were keyed on, writers simply push fresh entries when a key changes, and
 readers discard entries whose snapshot no longer matches the live queue.
 
+Entries embed the ``FlowQueue`` object itself (queues are per-fn
+singletons that live for the policy's lifetime), so validation is two
+attribute compares — no ``queues[fn_id]`` dict lookup + string hash per
+peek. ``FlowQueue`` uses identity eq/hash, which keeps the tuple
+tie-compare O(1) when the same queue is snapshotted twice under an equal
+key (``ins`` is unique, so entries of *different* queues never tie past
+it).
+
 Four indices, one invariant each ("every X has a current entry"):
 
   gvt heap       (vt, ins)     — queues with pending work; min = the
@@ -52,34 +60,39 @@ def _eligible(vt: float, global_vt: float, T: float) -> bool:
 class SchedulerIndex:
     def __init__(self, queues: Dict[str, FlowQueue]):
         self.queues = queues
-        self.cand: set = set()          # fn_ids: ACTIVE and len > 0
-        self._gvt: List[Tuple[float, int, str]] = []
-        self._throttle: List[Tuple[float, int, str]] = []
-        self._expiry: List[Tuple[float, int, str]] = []
-        # candidate entries: (key..., fn_id, len_snap, inflight_snap)
-        self._by_len: List[Tuple[int, int, str, int, int]] = []
-        self._by_inflight: List[Tuple[int, int, int, str, int, int]] = []
+        self.cand: set = set()          # FlowQueues: ACTIVE and len > 0
+        self._gvt: List[Tuple[float, int, FlowQueue]] = []
+        self._throttle: List[Tuple[float, int, FlowQueue]] = []
+        self._expiry: List[Tuple[float, int, FlowQueue]] = []
+        # candidate entries: (key..., queue, len_snap, inflight_snap)
+        self._by_len: List[Tuple[int, int, FlowQueue, int, int]] = []
+        self._by_inflight: List[
+            Tuple[int, int, int, FlowQueue, int, int]] = []
 
     # -- write side: push fresh entries on key change -----------------------
     def note_pending_vt(self, q: FlowQueue) -> None:
         if q.pending:
-            heapq.heappush(self._gvt, (q.vt, q.ins, q.fn_id))
-            self._maybe_compact_gvt()
+            h = self._gvt
+            heapq.heappush(h, (q.vt, q.ins, q))
+            if len(h) > 64 + 4 * len(self.queues):   # compact, inlined
+                self._gvt = [(qq.vt, qq.ins, qq)
+                             for qq in self.queues.values() if qq.pending]
+                heapq.heapify(self._gvt)
 
     def note_throttled(self, q: FlowQueue) -> None:
-        heapq.heappush(self._throttle, (q.vt, q.ins, q.fn_id))
+        heapq.heappush(self._throttle, (q.vt, q.ins, q))
         if len(self._throttle) > self._cap():
             self._throttle = [
-                (qq.vt, qq.ins, qq.fn_id) for qq in self.queues.values()
+                (qq.vt, qq.ins, qq) for qq in self.queues.values()
                 if qq.state is QueueState.THROTTLED]
             heapq.heapify(self._throttle)
 
     def note_idle(self, q: FlowQueue, alpha: float) -> None:
         heapq.heappush(self._expiry,
-                       (q.last_exec + q.ttl(alpha), q.ins, q.fn_id))
+                       (q.last_exec + q.ttl(alpha), q.ins, q))
         if len(self._expiry) > self._cap():
             self._expiry = [
-                (qq.last_exec + qq.ttl(alpha), qq.ins, qq.fn_id)
+                (qq.last_exec + qq.ttl(alpha), qq.ins, qq)
                 for qq in self.queues.values()
                 if not qq.pending and qq.in_flight == 0
                 and qq.state is not QueueState.INACTIVE]
@@ -88,41 +101,35 @@ class SchedulerIndex:
     def note_candidate(self, q: FlowQueue) -> None:
         """(Re-)index an ACTIVE queue with pending work under its current
         (len, in_flight) key; adds it to the candidate set."""
-        self.cand.add(q.fn_id)
+        self.cand.add(q)
         n, fl = len(q.pending), q.in_flight
-        heapq.heappush(self._by_len, (-n, q.ins, q.fn_id, n, fl))
-        heapq.heappush(self._by_inflight, (fl, -n, q.ins, q.fn_id, n, fl))
+        heapq.heappush(self._by_len, (-n, q.ins, q, n, fl))
+        heapq.heappush(self._by_inflight, (fl, -n, q.ins, q, n, fl))
         self._maybe_compact_cand()
 
-    def drop_candidate(self, fn_id: str) -> None:
-        self.cand.discard(fn_id)        # heap entries die by validation
+    def drop_candidate(self, q: FlowQueue) -> None:
+        self.cand.discard(q)            # heap entries die by validation
 
     # -- read side: validate-and-discard peeks ------------------------------
-    def min_pending_vt(self) -> Optional[float]:
-        """Current minimum VT over queues with pending work (the refreshed
-        Global_VT floor), or None when nothing is dispatchable."""
-        h = self._gvt
-        while h:
-            vt, _, fn = h[0]
-            q = self.queues.get(fn)
-            if q is not None and q.pending and q.vt == vt:
-                return vt
-            heapq.heappop(h)
-        return None
+    # NOTE two reads live inlined in MQFQSticky for frame-count reasons
+    # (they run 1.5-3x per event): the Global_VT floor walk (min VT over
+    # queues with pending work, validating gvt-heap tops) is inside
+    # ``_refresh_global_vt``, and the O(1) deferred-transition guard
+    # (raw expiry/throttle heap tops as lower bounds) is inside
+    # ``choose`` — see the exactness argument there.
 
     def pop_due_expiries(self, now: float, alpha: float
                          ) -> Iterator[FlowQueue]:
         """Queues whose anticipatory TTL has lapsed by ``now``."""
         h = self._expiry
         while h and h[0][0] <= now:
-            due, _, fn = heapq.heappop(h)
-            q = self.queues.get(fn)
-            if q is None or q.pending or q.in_flight \
+            due, _, q = heapq.heappop(h)
+            if q.pending or q.in_flight \
                     or q.state is QueueState.INACTIVE:
                 continue                # stale: queue revived or expired
             true_due = q.last_exec + q.ttl(alpha)
             if true_due > now:          # key drifted; requeue corrected
-                heapq.heappush(h, (true_due, q.ins, fn))
+                heapq.heappush(h, (true_due, q.ins, q))
                 continue
             yield q
 
@@ -133,10 +140,8 @@ class SchedulerIndex:
         is ineligible every deeper entry is too."""
         h = self._throttle
         while h:
-            vt, _, fn = h[0]
-            q = self.queues.get(fn)
-            if q is None or q.state is not QueueState.THROTTLED \
-                    or q.vt != vt:
+            vt, _, q = h[0]
+            if q.state is not QueueState.THROTTLED or q.vt != vt:
                 heapq.heappop(h)        # stale
                 continue
             if not _eligible(vt, global_vt, T):
@@ -150,12 +155,11 @@ class SchedulerIndex:
         winning entry stays in the heap; a dispatch changes its key and
         strands it as stale."""
         h = self._by_len if parallelism == 1 else self._by_inflight
+        cand = self.cand
         while h:
             entry = h[0]
-            fn, n, fl = entry[-3], entry[-2], entry[-1]
-            q = self.queues.get(fn)
-            if fn in self.cand and q is not None \
-                    and len(q.pending) == n and q.in_flight == fl:
+            q, n, fl = entry[-3], entry[-2], entry[-1]
+            if q in cand and len(q.pending) == n and q.in_flight == fl:
                 return q
             heapq.heappop(h)
         return None
@@ -163,7 +167,7 @@ class SchedulerIndex:
     def candidates_in_creation_order(self) -> List[FlowQueue]:
         """Exact candidate list in queue-creation (dict) order — the list
         the reference hands to ``rng.choice`` for plain MQFQ."""
-        qs = [self.queues[f] for f in self.cand]
+        qs = list(self.cand)
         qs.sort(key=lambda q: q.ins)
         return qs
 
@@ -171,39 +175,41 @@ class SchedulerIndex:
     def _cap(self) -> int:
         return 64 + 4 * len(self.queues)
 
-    def _maybe_compact_gvt(self) -> None:
-        if len(self._gvt) > self._cap():
-            self._gvt = [(q.vt, q.ins, q.fn_id)
-                         for q in self.queues.values() if q.pending]
-            heapq.heapify(self._gvt)
-
     def _maybe_compact_cand(self) -> None:
         if len(self._by_len) > self._cap():
-            ent = [(q, len(q.pending), q.in_flight)
-                   for q in (self.queues[f] for f in self.cand)]
-            self._by_len = [(-n, q.ins, q.fn_id, n, fl)
+            ent = [(q, len(q.pending), q.in_flight) for q in self.cand]
+            self._by_len = [(-n, q.ins, q, n, fl)
                             for q, n, fl in ent]
-            self._by_inflight = [(fl, -n, q.ins, q.fn_id, n, fl)
+            self._by_inflight = [(fl, -n, q.ins, q, n, fl)
                                  for q, n, fl in ent]
             heapq.heapify(self._by_len)
             heapq.heapify(self._by_inflight)
 
-    def peek_next_expiry(self, now: float, alpha: float) -> Optional[float]:
-        """Earliest strictly-future TTL lapse (for executor timers)."""
+    def peek_next_expiry(self, now: float, alpha: float,
+                         bound: Optional[float] = None) -> Optional[float]:
+        """Earliest strictly-future TTL lapse (for executor timers).
+
+        ``bound``: the caller's currently-armed earliest timer. Entry
+        keys lower-bound the true dues (an idle queue's freshest entry
+        equals its frozen true due; stale keys only under-shoot), so
+        when the raw heap top is already >= bound no expiry could need
+        arming and the validation walk is skipped entirely — this turns
+        the executor's per-event timer peek into an O(1) check."""
         h = self._expiry
+        if bound is not None and h and h[0][0] >= bound:
+            return None
         deferred = []
         result: Optional[float] = None
         while h:
-            due, _, fn = h[0]
-            q = self.queues.get(fn)
-            if q is None or q.pending or q.in_flight \
+            due, _, q = h[0]
+            if q.pending or q.in_flight \
                     or q.state is QueueState.INACTIVE:
                 heapq.heappop(h)
                 continue
             true_due = q.last_exec + q.ttl(alpha)
             if true_due != due:
                 heapq.heappop(h)
-                heapq.heappush(h, (true_due, q.ins, fn))
+                heapq.heappush(h, (true_due, q.ins, q))
                 continue
             if due <= now:              # due-but-unfired: skip past it
                 deferred.append(heapq.heappop(h))

@@ -32,6 +32,7 @@ equivalence exact:
 """
 from __future__ import annotations
 
+import heapq
 import random
 from typing import List, Optional
 
@@ -39,6 +40,12 @@ from repro.core.flow import FlowQueue, QueueState
 from repro.core.index import SchedulerIndex
 from repro.core.policy_base import Policy
 from repro.runtime.invocation import Invocation
+
+# hoisted enum members: _update_state runs ~1.5x per event and the
+# repeated QueueState.<X> attribute loads were measurable there
+_ACTIVE = QueueState.ACTIVE
+_THROTTLED = QueueState.THROTTLED
+_INACTIVE = QueueState.INACTIVE
 
 
 class MQFQSticky(Policy):
@@ -58,12 +65,26 @@ class MQFQSticky(Policy):
         self._rng = random.Random(seed)
         self.state_listeners = []
         self.index = SchedulerIndex(self.queues)
+        # False restores the pre-guard deferred-transition scan on every
+        # choose() — set by the control plane under sampling="per_event"
+        # so that reference mode reproduces the pre-PR cost profile
+        self.defer_guard = True
 
     # -- helpers ------------------------------------------------------------
     def _refresh_global_vt(self) -> None:
-        vt = self.index.min_pending_vt()
-        if vt is not None and vt > self.global_vt:
-            self.global_vt = vt
+        """Global_VT floor: min VT over queues with *pending* work, read
+        off the gvt heap under validate-and-discard. The walk lives here
+        rather than in SchedulerIndex because it runs on every choose()
+        and every dispatch and the valid-top case is the overwhelming
+        majority — one frame instead of two."""
+        h = self.index._gvt
+        while h:
+            vt, _, q = h[0]
+            if q.pending and q.vt == vt:
+                if vt > self.global_vt:
+                    self.global_vt = vt
+                return
+            heapq.heappop(h)
 
     def _throttled(self, q: FlowQueue) -> bool:
         """Complement of Eq. 1's eligibility VT < Global_VT + T, except the
@@ -75,39 +96,48 @@ class MQFQSticky(Policy):
         """Same state machine as the reference, plus index maintenance.
         Every mutation of a queue's key fields (len, in_flight, vt, state,
         last_exec) flows through here, so the index re-learns the queue's
-        current keys exactly when they can have changed."""
+        current keys exactly when they can have changed. The throttle
+        test (``_throttled``) and TTL are inlined — this runs ~1.5x per
+        event and was the single largest scheduler-core frame."""
         old = q.state
-        if not q.pending and q.in_flight == 0:
-            if q.state is not QueueState.INACTIVE \
-                    and now - q.last_exec >= q.ttl(self.alpha):
-                q.state = QueueState.INACTIVE   # queue expired
-            elif q.state is QueueState.INACTIVE:
-                pass
-            elif self._throttled(q):
-                q.state = QueueState.THROTTLED
+        pending = q.pending
+        idle = not pending and q.in_flight == 0
+        vt = q.vt
+        g = self.global_vt
+        throttled = vt >= g + self.T and vt > g   # see _throttled
+        if idle:
+            if old is not _INACTIVE \
+                    and now - q.last_exec >= self.alpha * q.iat:
+                new = _INACTIVE                   # queue expired
+            elif old is _INACTIVE:
+                new = _INACTIVE
+            elif throttled:
+                new = _THROTTLED
             else:
-                q.state = QueueState.ACTIVE
-        elif self._throttled(q):
-            q.state = QueueState.THROTTLED
+                new = _ACTIVE
+        elif throttled:
+            new = _THROTTLED
         else:
-            q.state = QueueState.ACTIVE
+            new = _ACTIVE
+        q.state = new
         idx = self.index
-        if q.state is QueueState.ACTIVE and q.pending:
+        if new is _ACTIVE and pending:
             idx.note_candidate(q)
         else:
-            idx.drop_candidate(q.fn_id)
-        if q.state is QueueState.THROTTLED:
+            idx.cand.discard(q)         # drop_candidate, inlined
+        if new is _THROTTLED:
             idx.note_throttled(q)
-        if not q.pending and q.in_flight == 0 \
-                and q.state is not QueueState.INACTIVE:
+        if idle and new is not _INACTIVE:
             idx.note_idle(q, self.alpha)
-        if old is not q.state:
+        if old is not new:
             for cb in self.state_listeners:
-                cb(q, old, q.state, now)
+                cb(q, old, new, now)
 
     def _apply_deferred(self, now: float) -> None:
         """Fire the transitions the reference discovers during its full
-        rescan: TTL expiries and throttle releases, in creation order."""
+        rescan: TTL expiries and throttle releases, in creation order.
+        Callers gate this behind the O(1) heap-top guard inlined in
+        ``choose``; the body always runs the full pass."""
         idx = self.index
         due: List[FlowQueue] = list(idx.pop_due_expiries(now, self.alpha))
         due += idx.pop_unthrottled(self.global_vt, self.T)
@@ -132,11 +162,35 @@ class MQFQSticky(Policy):
         holds): returns the chosen queue or None. O(log F) amortized on
         the sticky path; the plain-MQFQ random path sorts the candidate
         set (O(C log C)) because reproducing the reference's
-        ``rng.choice`` needs the full list in creation order."""
+        ``rng.choice`` needs the full list in creation order.
+
+        The deferred-transition guard is inlined (choose() runs ~1.5x
+        per event and the no-deferred-work case is the hot path): raw
+        expiry/throttle heap tops are *lower bounds* on the live values
+        — an idle queue's freshest expiry entry equals its frozen true
+        due, every throttled queue keeps a current (vt, ins) entry, and
+        stale entries only under-shoot — so a negative answer is exact
+        and a stale top merely triggers a spurious full pass. VT
+        eligibility is monotone downward, so an ineligible throttle top
+        implies every deeper entry is ineligible too.
+        ``defer_guard=False`` (per_event reference mode) restores the
+        pre-PR unconditional full scan."""
         self.decisions += 1
         self._refresh_global_vt()
-        self._apply_deferred(now)
         idx = self.index
+        if not self.defer_guard:
+            self._apply_deferred(now)
+        else:
+            h = idx._expiry
+            if h and h[0][0] <= now:
+                self._apply_deferred(now)
+            else:
+                t = idx._throttle
+                if t:
+                    vt = t[0][0]
+                    g = self.global_vt
+                    if vt < g + self.T or vt <= g:   # _eligible, inlined
+                        self._apply_deferred(now)
         if not idx.cand:
             return None
         if self.sticky:
@@ -161,12 +215,15 @@ class MQFQSticky(Policy):
         self._update_state(q, now)
 
     # -- executor integration --------------------------------------------------
-    def next_expiry(self, now: float) -> Optional[float]:
+    def next_expiry(self, now: float,
+                    bound: Optional[float] = None) -> Optional[float]:
         """Earliest future anticipatory-TTL lapse; the SimExecutor arms a
         timer event at this time so Inactive transitions (and the memory
         swap-outs they drive) happen on schedule, not at the next
-        arrival/completion that happens to rescan."""
-        return self.index.peek_next_expiry(now, self.alpha)
+        arrival/completion that happens to rescan. ``bound`` (the
+        executor's earliest already-armed timer) lets the index answer
+        "nothing earlier" in O(1)."""
+        return self.index.peek_next_expiry(now, self.alpha, bound)
 
 
 class MQFQ(MQFQSticky):

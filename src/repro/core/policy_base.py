@@ -48,11 +48,15 @@ class Policy:
     def on_complete(self, q: FlowQueue, inv: Invocation, now: float) -> None:
         q.on_complete(inv, now, inv.service_time)
 
-    def next_expiry(self, now: float) -> Optional[float]:
+    def next_expiry(self, now: float,
+                    bound: Optional[float] = None) -> Optional[float]:
         """Earliest strictly-future time at which this policy's internal
         state changes without an arrival/completion (e.g. an anticipatory
         TTL lapse). Executors arm a timer event at this time; None means
-        no timed transition is pending. Baselines have none."""
+        no timed transition is pending. ``bound`` is the executor's
+        earliest already-armed timer — implementations may return None
+        immediately when nothing earlier than it can be due. Baselines
+        have none."""
         return None
 
     # -- shared accounting ---------------------------------------------------

@@ -126,12 +126,15 @@ class ReferenceMQFQSticky(Policy):
         self._update_state(q, now)
 
     # -- executor integration --------------------------------------------------
-    def next_expiry(self, now: float) -> Optional[float]:
+    def next_expiry(self, now: float,
+                    bound: Optional[float] = None) -> Optional[float]:
         """Earliest future time an idle queue's anticipatory TTL lapses
-        (linear scan, like everything here). The SimExecutor schedules a
-        timer event at this time so Active->Inactive transitions (and the
-        memory swap-outs they trigger) happen when the TTL actually
-        expires rather than at the next arrival/completion."""
+        (linear scan, like everything here; ``bound`` is the indexed
+        implementation's O(1) early-out hint and is ignored). The
+        SimExecutor schedules a timer event at this time so
+        Active->Inactive transitions (and the memory swap-outs they
+        trigger) happen when the TTL actually expires rather than at the
+        next arrival/completion."""
         best: Optional[float] = None
         for q in self.queues.values():
             if q.pending or q.in_flight or q.state is QueueState.INACTIVE:

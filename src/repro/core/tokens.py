@@ -11,7 +11,7 @@ from __future__ import annotations
 from dataclasses import dataclass, field
 
 
-@dataclass
+@dataclass(slots=True)
 class ConcurrencyController:
     max_d: int = 2
     dynamic: bool = False
@@ -36,14 +36,26 @@ class ConcurrencyController:
         assert self.outstanding > 0
         self.outstanding -= 1
 
-    def report_utilization(self, util: float) -> None:
-        """Feed an occupancy sample; adjust D if dynamic (paper §4.4)."""
+    def report_utilization(self, util: float) -> bool:
+        """Feed an occupancy sample; adjust D if dynamic (paper §4.4).
+        Returns True iff ``current_d`` changed, so the control plane can
+        run its ``policy.device_parallelism`` min-sync only on actual
+        budget transitions instead of once per event.
+
+        The EMA depends on the *number* of samples, not elapsed time, so
+        under dynamic D the control plane must keep feeding one sample
+        per event (the transition-driven sampler does; with ``dynamic``
+        off it skips this call entirely — the EMA is pure telemetry
+        then and ``current_d`` never moves)."""
         self.util = util
         self.util_avg = (1 - self.ema) * self.util_avg + self.ema * util
         if not self.dynamic:
-            return
+            return False
         if self.util_avg > self.util_threshold and self.current_d > 1:
             self.current_d -= 1
+            return True
         elif self.util_avg < 0.8 * self.util_threshold \
                 and self.current_d < self.max_d:
             self.current_d += 1
+            return True
+        return False

@@ -46,7 +46,7 @@ MADVISE_DISPATCH_OVERHEAD = 0.050  # s of wasted directive traffic
 THRASH_PENALTY = 1.5
 
 
-@dataclass
+@dataclass(slots=True)
 class Region:
     fn_id: str
     size: int
@@ -65,6 +65,10 @@ class DeviceMemoryManager:
         self.capacity = capacity_bytes
         self.h2d_bw = h2d_bw
         self.policy = policy
+        # policy predicates, precomputed off the per-dispatch acquire path
+        self._paged = policy in ("ondemand", "madvise")
+        self._madvise = policy == "madvise"
+        self._prefetch_only = policy == "prefetch"
         self.regions: Dict[str, Region] = {}
         # notified with fn_id whenever a region is swapped out; the
         # wall-clock executor mirrors these onto real endpoints
@@ -268,13 +272,14 @@ class DeviceMemoryManager:
         """Make fn resident for execution. Returns (ready_time,
         exec_multiplier): ready_time is when data is on device; the
         multiplier stretches execution for paging-style policies."""
-        r = self.region(fn_id, size)
+        r = self.regions.get(fn_id)
+        if r is None or r.size != size:
+            r = self.region(fn_id, size)
         r.evictable = False
         if r.last_use != now:
             r.last_use = now
             self._reindex(r)           # fresh LRU key while resident
-        mult = 1.0
-        if self.policy in ("ondemand", "madvise"):
+        if self._paged:
             # pages migrate on first touch during execution
             if not r.resident:
                 self._evict_lru(r.size, now, protect=(fn_id,))
@@ -283,19 +288,20 @@ class DeviceMemoryManager:
                 mult_bytes = r.size / self.h2d_bw
                 # stretch execution instead of upfront wait
                 return (now + (MADVISE_DISPATCH_OVERHEAD
-                               if self.policy == "madvise" else 0.0),
+                               if self._madvise else 0.0),
                         1.0 + ONDEMAND_PENALTY * mult_bytes)
-            if self.policy == "madvise":
+            if self._madvise:
                 return now + MADVISE_DISPATCH_OVERHEAD, 1.0
             return now, 1.0
         # prefetch / prefetch_swap
         if r.resident:
-            ready = max(now, r.upload_eta)
-            return ready, mult
+            upload_eta = r.upload_eta
+            return (upload_eta if upload_eta > now else now), 1.0
         # miss: synchronous upload on the critical path
+        mult = 1.0
         needed_eviction = self.free_bytes() < r.size
         self._evict_lru(r.size, now, protect=(fn_id,))
-        if self.policy == "prefetch" and needed_eviction:
+        if self._prefetch_only and needed_eviction:
             # no proactive swap-out: reclaim happens lazily during
             # execution (UVM-style page-out on demand) -> exec stretch
             mult = THRASH_PENALTY

@@ -35,8 +35,8 @@ from dataclasses import dataclass
 from typing import Dict, List, Optional, Tuple
 
 
-@dataclass(eq=False)          # identity semantics: two containers of the
-class Container:              # same fn created at the same instant are
+@dataclass(eq=False, slots=True)   # identity semantics: two containers of
+class Container:              # the same fn created at the same instant are
     fn_id: str                # field-identical but distinct; removal must
     created: float            # never pick the twin
     last_use: float
@@ -117,9 +117,13 @@ class WarmPool:
     def acquire(self, fn_id: str, now: float,
                 device_resident: bool) -> Tuple[Container, str]:
         """Returns (container, start_type)."""
-        c = self._idle(fn_id)
-        if c is not None:
-            heapq.heappop(self._idle_heaps[fn_id])   # the validated top
+        h = self._idle_heaps.get(fn_id)     # _idle peek + pop, one lookup
+        while h:
+            _, seq, c = h[0]
+            if c.idle_seq != seq:
+                heapq.heappop(h)            # stale: acquired or evicted
+                continue
+            heapq.heappop(h)                # the validated top
             c.idle_seq = -1             # lru-heap entry dies by validation
             self._idle_by_fn[fn_id] -= 1
             self._n_idle -= 1
@@ -142,19 +146,22 @@ class WarmPool:
         return c, "cold"
 
     def release(self, c: Container, now: float) -> None:
+        fn_id = c.fn_id
         c.busy = False
         c.last_use = now
-        stamp = self._fn_stamp.get(c.fn_id)
+        stamp = self._fn_stamp.get(fn_id)
         if stamp is None:
-            stamp = self._fn_stamp[c.fn_id] = next(self._stamp)
+            stamp = self._fn_stamp[fn_id] = next(self._stamp)
         seq = next(self._seq)
         c.idle_seq = seq
-        heapq.heappush(self._idle_heaps.setdefault(c.fn_id, []),
-                       (-now, seq, c))
+        h = self._idle_heaps.get(fn_id)
+        if h is None:
+            h = self._idle_heaps[fn_id] = []
+        heapq.heappush(h, (-now, seq, c))
         heapq.heappush(self._lru_heap, (now, stamp, seq, c))
-        self._idle_by_fn[c.fn_id] = self._idle_by_fn.get(c.fn_id, 0) + 1
-        self._n_idle += 1
-        if len(self._lru_heap) > 64 + 4 * max(self._n_idle, 1):
+        self._idle_by_fn[fn_id] = self._idle_by_fn.get(fn_id, 0) + 1
+        n_idle = self._n_idle = self._n_idle + 1
+        if len(self._lru_heap) > 64 + 4 * (n_idle if n_idle > 1 else 1):
             self._compact()
 
     def evict_fn(self, fn_id: str) -> None:

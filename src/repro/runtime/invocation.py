@@ -1,11 +1,20 @@
-"""Invocation records with full latency breakdown."""
+"""Invocation records with full latency breakdown.
+
+``slots=True``: the simulator creates one record per trace event, so on
+full-metrics million-invocation replays the per-instance ``__dict__``
+dominated RSS. Slots cut ~45% per record and make attribute access on
+the event-loop hot path cheaper. Everything the lifecycle ever sets is a
+declared field — including ``charged_tau`` (the VT charge pinned at
+dispatch for the deficit settle) and ``request`` (the wall-clock
+executor's payload), which used to be monkey-patched on.
+"""
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Optional
 
 
-@dataclass
+@dataclass(slots=True)
 class Invocation:
     fn_id: str
     arrival: float
@@ -18,6 +27,8 @@ class Invocation:
     overhead: float = 0.0                # cold start + memory wait
     service_time: float = 0.0            # device execution time
     device_id: int = 0
+    charged_tau: Optional[float] = None  # tau charged to VT at dispatch
+    request: Optional[dict] = None       # wall-clock request payload
 
     @property
     def latency(self) -> float:

@@ -41,6 +41,20 @@ class ServerConfig:
     # record a per-stage wall-time breakdown of the dispatch pipeline
     # (ControlPlane.stage_ns; used by benchmarks/scale.py --stages)
     profile_stages: bool = False
+    # per-event control-plane bookkeeping:
+    #   "transition" — O(1)/allocation-free events: utilization is cached
+    #                  and recomputed only when a dispatch/completion
+    #                  changed some device's demand, the dynamic-D /
+    #                  ``policy.device_parallelism`` sync runs only when a
+    #                  device budget actually moved, fairness windows roll
+    #                  behind a deadline check, and EventBus records are
+    #                  only constructed when someone subscribed
+    #   "per_event"  — the pre-PR code path (per-event device scans,
+    #                  unconditional event construction), kept alive as
+    #                  the differential-testing reference — same
+    #                  convention as core/reference.py; see
+    #                  tests/test_event_loop_equivalence.py
+    sampling: str = "transition"
     # executor: "sim" (virtual clock) or "wallclock" (threads + JAX)
     executor: str = "sim"
     # metrics: "full" records every invocation + utilization sample;

@@ -46,7 +46,7 @@ if TYPE_CHECKING:
     from repro.server.config import ServerConfig
 
 
-@dataclass
+@dataclass(slots=True)
 class DeviceState:
     """One accelerator slice: memory manager + D-token controller +
     in-flight bookkeeping."""
@@ -61,14 +61,34 @@ class DeviceState:
     # dict per dispatch), kept incrementally for O(1) admit
     running_bytes: int = 0
     running_fn_count: Dict[str, int] = field(default_factory=dict)
+    # demand-sum cache: recomputed (with the exact dict-sum arithmetic,
+    # so results stay bit-identical to a fresh scan) only after a
+    # dispatch/completion changed ``demands`` — utilization() and the
+    # executor's oversubscription stretch stop paying O(|demands|) on
+    # events that moved nothing
+    _demand_sum: float = field(default=0.0, init=False, repr=False)
+    _demand_dirty: bool = field(default=False, init=False, repr=False)
+
+    def demand_total(self) -> float:
+        if self._demand_dirty:
+            self._demand_sum = sum(self.demands.values())
+            self._demand_dirty = False
+        return self._demand_sum
 
     def utilization(self) -> float:
+        return min(1.0, self.demand_total())
+
+    def utilization_scan(self) -> float:
+        """Pre-PR body: a fresh dict sum per call. Kept as the
+        ``sampling="per_event"`` reference so the perf comparison
+        measures the cost this cache removed."""
         return min(1.0, sum(self.demands.values()))
 
     def note_dispatch(self, inv_id: int, fn_id: str, spec: FunctionSpec
                       ) -> None:
         self.running[inv_id] = fn_id
         self.demands[inv_id] = spec.demand
+        self._demand_dirty = True
         n = self.running_fn_count.get(fn_id, 0)
         if n == 0:
             self.running_bytes += spec.mem_bytes
@@ -78,6 +98,7 @@ class DeviceState:
                       ) -> None:
         self.running.pop(inv_id, None)
         self.demands.pop(inv_id, None)
+        self._demand_dirty = True
         n = self.running_fn_count.get(fn_id, 0) - 1
         if n <= 0:
             self.running_fn_count.pop(fn_id, None)
@@ -86,7 +107,7 @@ class DeviceState:
             self.running_fn_count[fn_id] = n
 
 
-@dataclass
+@dataclass(slots=True)
 class DispatchDecision:
     """Everything an executor needs to realize one dispatched invocation."""
     inv: Invocation
@@ -125,7 +146,9 @@ class ControlPlane:
         # million-event runs)
         self.util_samples: List = []
         self.util_integral = 0.0
-        self._last_util: tuple = (0.0, 0.0)           # (t, util)
+        self._last_util: tuple = (0.0, 0.0)           # (t, util) [per_event]
+        self._last_t = 0.0                            # [transition]
+        self._last_u = 0.0
         self._record_util = getattr(config, "metrics", "full") != "lean"
         self._backlogged: set = set()                 # fns with queued/in-flight work
         self._sticky_dev: Dict[str, int] = {}
@@ -135,6 +158,42 @@ class ControlPlane:
         self._profile = getattr(config, "profile_stages", False)
         self.stage_ns: Dict[str, int] = {
             "choose": 0, "place": 0, "admit": 0, "pool": 0, "mem": 0}
+
+        # transition-driven vs per-event control-plane bookkeeping (see
+        # ServerConfig.sampling). ``sample`` is bound per instance so the
+        # executors' per-event call costs no mode branch.
+        self.sampling = getattr(config, "sampling", "transition")
+        if self.sampling not in ("transition", "per_event"):
+            raise ValueError(f"unknown sampling mode {self.sampling!r}")
+        self._emit_all = self.sampling == "per_event"
+        # cached subscriber-list references (never rebound by EventBus;
+        # append-only) — the emit sites below skip event-record
+        # construction entirely while these are empty
+        self._dispatch_subs = self.bus._dispatch
+        self._complete_subs = self.bus._complete
+        self._state_subs = self.bus._state_change
+        self._dynamic_d = getattr(config, "dynamic_d", False)
+        self._n_dev = len(self.devices)
+        self._agg_util = 0.0      # cached mean utilization over devices
+        self._agg_dirty = True    # some device's demands changed
+        self._dp_synced = False   # policy.device_parallelism seeded yet?
+        # per-device cached min(1, demand) as plain floats: refreshed at
+        # the dispatch/completion that changed the device, summed (in
+        # device order, bit-identical to the reference's scan) at the
+        # next sample instead of 2 method calls per device per event
+        self._dev_util = [0.0] * self._n_dev
+        if self.sampling == "per_event":
+            self.sample = self._sample_per_event
+            self._pick = self._pick_device_scan
+            # restore the pre-guard deferred-transition scan too, so the
+            # reference mode reproduces the full pre-PR per-event cost
+            policy.defer_guard = False
+        else:
+            self.sample = self._sample_transition
+            self._pick = self.pick_device
+        if self._profile:
+            # bind the profiled body once instead of branching per call
+            self.dispatch_once = self._dispatch_once_profiled
 
         # queue-state -> memory hooks (MQFQ family); baselines prefetch at
         # arrival and mark evictable at completion-of-last (paper applies
@@ -150,8 +209,9 @@ class ControlPlane:
             dev.mem.on_queue_active(q.fn_id, spec.mem_bytes, now)
         else:
             dev.mem.on_queue_idle(q.fn_id, now)
-        self.bus.emit_state_change(
-            StateChangeEvent(q.fn_id, old, new, now))
+        if self._state_subs or self._emit_all:
+            self.bus.emit_state_change(
+                StateChangeEvent(q.fn_id, old, new, now))
 
     def _fn_device(self, fn_id: str) -> DeviceState:
         return self.devices[self._sticky_dev.get(fn_id, 0)]
@@ -169,7 +229,28 @@ class ControlPlane:
     def pick_device(self, fn_id: str) -> Optional[DeviceState]:
         """Sticky late binding: prefer the device where the function is
         resident (avoids cross-device cold starts, paper §5 multi-GPU),
-        else the least-loaded device with a free token."""
+        else the least-loaded device with a free token.
+
+        Single pass, no intermediate lists: the first free device with
+        the function resident wins (device order — the reference's
+        ``resident[0]``); otherwise the lowest-load free device,
+        first-wins on ties (the reference's stable ``min``)."""
+        best: Optional[DeviceState] = None
+        best_load = 0
+        for d in self.devices:
+            t = d.tokens
+            if t.outstanding >= t.current_d:
+                continue
+            if d.mem.is_resident(fn_id, 1e18):
+                return d
+            load = len(d.running)
+            if best is None or load < best_load:
+                best, best_load = d, load
+        return best
+
+    def _pick_device_scan(self, fn_id: str) -> Optional[DeviceState]:
+        """Pre-PR body (``sampling="per_event"`` reference): materializes
+        the free/resident lists per dispatch."""
         free = [d for d in self.devices
                 if d.tokens.outstanding < d.tokens.current_d]
         if not free:
@@ -195,7 +276,7 @@ class ControlPlane:
         drain fully)."""
         out: List[DispatchDecision] = []
         while budget is None or len(out) < budget:
-            d = self._dispatch_once(now)
+            d = self.dispatch_once(now)
             if d is None:
                 break
             out.append(d)
@@ -210,16 +291,18 @@ class ControlPlane:
         out = self.drain(now, budget=1)
         return out[0] if out else None
 
-    def _dispatch_once(self, now: float) -> Optional[DispatchDecision]:
-        """One pass of Algorithm 1 DISPATCH."""
-        if self._profile:
-            return self._dispatch_once_profiled(now)
+    def dispatch_once(self, now: float) -> Optional[DispatchDecision]:
+        """One pass of Algorithm 1 DISPATCH. Public so the sim executor's
+        hot loop can drive the pipeline directly without ``drain``'s
+        per-event list/callback scaffolding. With ``profile_stages`` the
+        instance attribute is rebound to ``_dispatch_once_profiled`` in
+        ``__init__`` — no per-call branch either way."""
         q = self.policy.choose(now)
         if q is None:
             return None
         fn_id = q.fn_id
         spec = self.fns[fn_id]
-        dev = self.pick_device(fn_id)
+        dev = self._pick(fn_id)
         if dev is None:
             return None  # no D token anywhere (Alg. 1 line 12-13)
         if not dev.mem.admit(fn_id, spec.mem_bytes, dev.running_bytes, now):
@@ -238,15 +321,18 @@ class ControlPlane:
         inv.start_type = start_type
         inv.device_id = dev.dev_id
         dev.note_dispatch(inv.inv_id, fn_id, spec)
+        self._agg_dirty = True
+        self._dev_util[dev.dev_id] = dev.utilization()
         decision = DispatchDecision(inv, dev, spec, start_type, ready,
                                     mem_mult)
-        self.bus.emit_dispatch(
-            DispatchEvent(inv, fn_id, dev.dev_id, start_type, now))
+        if self._dispatch_subs or self._emit_all:
+            self.bus.emit_dispatch(
+                DispatchEvent(inv, fn_id, dev.dev_id, start_type, now))
         return decision
 
     def _dispatch_once_profiled(self, now: float
                                 ) -> Optional[DispatchDecision]:
-        """_dispatch_once with per-stage timing (kept as a separate body
+        """dispatch_once with per-stage timing (kept as a separate body
         so the unprofiled hot path pays nothing)."""
         ns = self.stage_ns
         t = time.perf_counter_ns()
@@ -257,7 +343,7 @@ class ControlPlane:
         fn_id = q.fn_id
         spec = self.fns[fn_id]
         t = time.perf_counter_ns()
-        dev = self.pick_device(fn_id)
+        dev = self._pick(fn_id)
         ns["place"] += time.perf_counter_ns() - t
         if dev is None:
             return None
@@ -284,39 +370,109 @@ class ControlPlane:
         inv.start_type = start_type
         inv.device_id = dev.dev_id
         dev.note_dispatch(inv.inv_id, fn_id, spec)
+        self._agg_dirty = True
+        self._dev_util[dev.dev_id] = dev.utilization()
         decision = DispatchDecision(inv, dev, spec, start_type, ready,
                                     mem_mult)
-        self.bus.emit_dispatch(
-            DispatchEvent(inv, fn_id, dev.dev_id, start_type, now))
+        if self._dispatch_subs or self._emit_all:
+            self.bus.emit_dispatch(
+                DispatchEvent(inv, fn_id, dev.dev_id, start_type, now))
         return decision
 
     # -- pipeline: completion ----------------------------------------------------
     def on_complete(self, inv: Invocation, now: float) -> None:
+        fn_id = inv.fn_id
+        policy = self.policy
         dev = self.devices[inv.device_id]
-        dev.note_complete(inv.inv_id, inv.fn_id, self.fns[inv.fn_id])
+        dev.note_complete(inv.inv_id, fn_id, self.fns[fn_id])
+        self._agg_dirty = True
+        self._dev_util[dev.dev_id] = dev.utilization()
         dev.tokens.release()
         container = self._containers.pop(inv.inv_id)
         self.pool.release(container, now)
-        q = self.policy.get_queue(inv.fn_id)
-        self.policy.on_complete(q, inv, now)
-        self.fairness.add_service(inv.fn_id, inv.service_time, q.tau)
+        q = policy.get_queue(fn_id)
+        policy.on_complete(q, inv, now)
+        # FairnessTracker.add_service inlined (weight == 1.0 on this
+        # path, and x / 1.0 == x bitwise): one frame per completion
+        f = self.fairness
+        f._service[fn_id] += inv.service_time
+        f._tau[fn_id] = q.tau
         if not q.backlogged:
-            self._backlogged.discard(inv.fn_id)
-            self.fairness.on_backlog_change(inv.fn_id, False)
-            if not self.policy.anticipatory:
-                dev = self.devices[inv.device_id]
-                dev.mem.on_queue_idle(inv.fn_id, now)
-        self.bus.emit_complete(
-            CompleteEvent(inv, inv.fn_id, inv.device_id, now))
+            self._backlogged.discard(fn_id)
+            self.fairness.on_backlog_change(fn_id, False)
+            if not policy.anticipatory:
+                dev.mem.on_queue_idle(fn_id, now)
+        if self._complete_subs or self._emit_all:
+            self.bus.emit_complete(
+                CompleteEvent(inv, fn_id, inv.device_id, now))
 
     # -- per-event sampling -------------------------------------------------------
-    def sample(self, now: float) -> None:
-        """Utilization sample + dynamic-D feedback + fairness window roll.
-        Executors call this after every event (arrival/dispatch/complete).
-        O(#devices) per call: backlog bookkeeping is transition-driven
-        (``_backlogged`` set) and the per-flow scans the seed did here now
-        run only at window rolls."""
-        utils = [d.utilization() for d in self.devices]
+    # Executors call ``sample`` (bound in __init__ to one of the two
+    # bodies below) after every event (arrival/dispatch/complete/timer).
+
+    def _sample_transition(self, now: float) -> None:
+        """Transition-driven bookkeeping: everything the per-event
+        reference recomputed from scratch is either cached behind a dirty
+        flag (mean utilization — invalidated by dispatch/complete, the
+        only demand mutations) or gated on an actual transition (the
+        ``device_parallelism`` min-sync fires only when some device's
+        ``current_d`` moved; the fairness window rolls behind its
+        deadline). The float arithmetic on every path is identical to the
+        reference's, so RunResults stay bit-identical — proven across the
+        policy × dynamic-D × memory-pressure matrix by
+        tests/test_event_loop_equivalence.py.
+
+        Under dynamic D the per-device EMA *is* the control signal and
+        depends on sample count, so it still steps every event (but
+        allocation-free, over cached demand sums). With static D the EMA
+        is telemetry with no reader and is skipped entirely."""
+        if self._dynamic_d:
+            util = 0.0
+            mn = None
+            vals = self._dev_util
+            for i, d in enumerate(self.devices):
+                u = vals[i]     # cached min(1, demand), fresh by note_*
+                util += u
+                t = d.tokens
+                t.report_utilization(u)
+                cd = t.current_d
+                if mn is None or cd < mn:
+                    mn = cd
+            util /= self._n_dev
+            pol = self.policy
+            if pol.device_parallelism != mn:
+                pol.device_parallelism = mn
+        else:
+            if not self._dp_synced:
+                self.policy.device_parallelism = min(
+                    d.tokens.current_d for d in self.devices)
+                self._dp_synced = True
+            if self._agg_dirty:
+                # sum(list) accumulates in device order — the identical
+                # float arithmetic to the reference's per-event scan
+                util = sum(self._dev_util) / self._n_dev
+                self._agg_util = util
+                self._agg_dirty = False
+            else:
+                util = self._agg_util
+        self.util_integral += self._last_u * (now - self._last_t)
+        self._last_t = now
+        self._last_u = util
+        if self._record_util:
+            self.util_samples.append((now, util))
+        f = self.fairness
+        # the due-check must be the exact expression maybe_roll guards
+        # with (``now - _t0 >= window``), not ``now >= f.next_roll``:
+        # float(t0 + w) can round one ulp away from the subtraction form
+        if now - f._t0 >= f.window:
+            f.maybe_roll(now, self._backlogged, self.policy.queues.keys())
+
+    def _sample_per_event(self, now: float) -> None:
+        """Pre-PR reference (``sampling="per_event"``): per-event device
+        scans with fresh list/dict traffic, unconditional dynamic-D
+        feedback + min-sync, and an unconditional ``maybe_roll`` call.
+        Kept verbatim as the differential-testing and perf baseline."""
+        utils = [d.utilization_scan() for d in self.devices]
         util = sum(utils) / len(utils)
         last_t, last_u = self._last_util
         self.util_integral += last_u * (now - last_t)

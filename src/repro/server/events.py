@@ -8,6 +8,21 @@ only carried queue-state changes).
 Subscribers must be fast and must not call back into the control plane;
 they run synchronously on the dispatch path (executors offload real work
 — e.g. weight uploads — to their own pools).
+
+No-subscriber fast path: the control plane caches references to the
+subscriber lists below and constructs an event record *only when the
+matching list is non-empty* (or when ``ServerConfig.sampling ==
+"per_event"``, the pre-PR reference mode, which always constructs).
+Simulation runs subscribe to nothing, so the hot loop skips both the
+dataclass allocation and the emit call entirely. Two consequences:
+
+  - subscribing mid-run works (``on_*`` appends to the same cached list
+    object), and is exactly how the differential tests flip the slow
+    path on;
+  - the lists themselves must never be rebound — append/clear only.
+
+The record classes use ``slots=True``: they are allocated per dispatch /
+completion when anyone subscribes, so they should stay cheap.
 """
 from __future__ import annotations
 
@@ -18,7 +33,7 @@ from repro.core.flow import QueueState
 from repro.runtime.invocation import Invocation
 
 
-@dataclass(frozen=True)
+@dataclass(frozen=True, slots=True)
 class StateChangeEvent:
     """A flow queue moved between Active / Throttled / Inactive."""
     fn_id: str
@@ -27,7 +42,7 @@ class StateChangeEvent:
     time: float
 
 
-@dataclass(frozen=True)
+@dataclass(frozen=True, slots=True)
 class DispatchEvent:
     """An invocation cleared the full pipeline and left the queue."""
     inv: Invocation
@@ -37,7 +52,7 @@ class DispatchEvent:
     time: float
 
 
-@dataclass(frozen=True)
+@dataclass(frozen=True, slots=True)
 class CompleteEvent:
     inv: Invocation
     fn_id: str

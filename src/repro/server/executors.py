@@ -9,13 +9,17 @@
 
 Both call exactly the same ControlPlane methods in the same order per
 event: on_arrival / drain / on_complete / sample. Dispatch is batched
-through ``ControlPlane.drain`` (paper §5: the dispatcher thread services
-every freed token / newly-eligible queue in one pass); each decision is
-realized via callback before the next choose, so the sequence is
-bit-identical to the seed's one-``try_dispatch``-per-call loop (set
-``ServerConfig.batch_dispatch=False`` to run that legacy loop, e.g. for
-the differential tests). The ``Server`` facade fronts whichever executor
-the config selects.
+(paper §5: the dispatcher thread services every freed token /
+newly-eligible queue in one pass); each decision is realized before the
+next choose, so the sequence is bit-identical to the seed's
+one-``try_dispatch``-per-call loop. The sim executor's default loop
+(``sampling="transition"`` + ``batch_dispatch=True``) inlines that
+drain as a direct ``ControlPlane.dispatch_once`` loop — no per-event
+decision list or realize closure; ``sampling="per_event"`` and/or
+``batch_dispatch=False`` run the retained reference loops (per-event
+``drain`` with a fresh closure, or the seed's per-token loop) for the
+differential tests. The ``Server`` facade fronts whichever executor the
+config selects.
 """
 from __future__ import annotations
 
@@ -61,11 +65,22 @@ class SimExecutor:
             StreamingStats() if self.lean else None
         self.events = 0
         self.batch = getattr(config, "batch_dispatch", True)
+        self._transition = \
+            getattr(config, "sampling", "transition") != "per_event"
         self._heap: List = []
         self._seq = itertools.count()
         self._n_arrived = 0
         self._last_arrival_t = float("-inf")
-        self._armed: set = set()        # TTL timer times already in the heap
+        # TTL timer times already in the heap. ``_arm_timer`` only arms a
+        # time strictly below every armed one, so in insertion order the
+        # list is strictly decreasing, and timers fire smallest-first —
+        # i.e. it is a stack: append on arm, pop on fire, peek the
+        # current minimum at [-1]. The seed kept a set and ran
+        # ``min(self._armed)`` per event — O(|armed|) every event and
+        # quadratic when many TTL timers were in flight.
+        self._armed: List[float] = []
+        # per-event cost breakdown (ns), filled by run_profiled only
+        self.event_ns: Dict[str, int] = {}
 
     def _push(self, t: float, kind: int, payload) -> None:
         heapq.heappush(self._heap, (t, kind, next(self._seq), payload))
@@ -76,23 +91,88 @@ class SimExecutor:
         ev = next(it, None)
         if ev is None:
             return
-        if ev.time < self._last_arrival_t:
+        t, fn_id = ev          # TraceEvent tuple-unpack: no attr protocol
+        if t < self._last_arrival_t:
             raise ValueError(
-                f"trace must be time-sorted: got arrival at {ev.time} "
+                f"trace must be time-sorted: got arrival at {t} "
                 f"after {self._last_arrival_t} (the streaming executor "
                 f"admits one pending arrival at a time)")
-        self._last_arrival_t = ev.time
-        inv = Invocation(ev.fn_id, ev.time, inv_id=self._n_arrived)
+        self._last_arrival_t = t
+        inv = Invocation(fn_id, t, inv_id=self._n_arrived)
         self._n_arrived += 1
         if not self.lean:
             self.invocations.append(inv)
-        self._push(ev.time, self.ARRIVAL, inv)
+        heapq.heappush(self._heap, (t, self.ARRIVAL, next(self._seq), inv))
 
     def run(self, trace) -> RunResult:
         cp = self.control
         it = iter(trace)
         self._pull_arrival(it)
         now = 0.0
+        if self.batch and self._transition:
+            now = self._run_fast(it, now)
+        else:
+            now = self._run_reference(it, now)
+        return RunResult(cp.policy.name, self.invocations, cp.fairness,
+                         cp.pool, cp.util_samples, cp.devices, now,
+                         stats=self.stats, util_integral=cp.util_integral)
+
+    def _run_fast(self, it, now: float) -> float:
+        """Allocation-light event loop: the batched drain is inlined as a
+        direct ``dispatch_once`` loop (no per-event list, no per-event
+        ``realize`` closure), hot callables are bound once, and the event
+        counter lives in a local. Event semantics — handler order,
+        dispatch order, sample-after-drain, timer re-arm — are identical
+        to ``_run_reference``; tests/test_event_loop_equivalence.py holds
+        the two bit-identical."""
+        cp = self.control
+        heap = self._heap
+        pop = heapq.heappop
+        push = heapq.heappush
+        seq = self._seq
+        on_arrival = cp.on_arrival
+        on_complete = cp.on_complete
+        sample = cp.sample
+        dispatch_once = cp.dispatch_once
+        realize = self._realize
+        pull = self._pull_arrival
+        next_expiry = cp.policy.next_expiry
+        armed = self._armed
+        record = self.stats.record if self.lean else None
+        ARRIVAL, COMPLETE, TIMER = self.ARRIVAL, self.COMPLETE, self.TIMER
+        events = 0
+        while heap:
+            now, kind, _, payload = pop(heap)
+            events += 1
+            if kind == ARRIVAL:
+                on_arrival(payload, now)
+                pull(it)
+            elif kind == COMPLETE:
+                on_complete(payload, now)
+                if record is not None:
+                    record(payload)
+            else:                       # TIMER: queue-state housekeeping
+                armed.pop()             # fired timers pop in LIFO order
+            while True:
+                d = dispatch_once(now)
+                if d is None:
+                    break
+                realize(d, now)
+            sample(now)
+            due = next_expiry(now, armed[-1] if armed else None)
+            if due is not None and (not armed or due < armed[-1]):
+                armed.append(due)
+                push(heap, (due, TIMER, next(seq), None))
+        self.events += events
+        return now
+
+    def _run_reference(self, it, now: float) -> float:
+        """Pre-PR event loop (``sampling="per_event"`` and/or
+        ``batch_dispatch=False``): per-event ``drain`` call with a fresh
+        ``realize`` closure and decision list, or the seed's
+        one-``try_dispatch``-per-call loop. The differential-testing and
+        perf reference for the fast loop above."""
+        cp = self.control
         while self._heap:
             now, kind, _, payload = heapq.heappop(self._heap)
             self.events += 1
@@ -104,7 +184,7 @@ class SimExecutor:
                 if self.lean:
                     self.stats.record(payload)
             else:                       # TIMER: queue-state housekeeping
-                self._armed.discard(now)
+                self._armed.pop()
             if self.batch:
                 cp.drain(now, realize=lambda d: self._realize(d, now))
             else:               # legacy per-token loop (differential tests)
@@ -115,20 +195,25 @@ class SimExecutor:
                     self._realize(decision, now)
             cp.sample(now)
             self._arm_timer(now)
-        return RunResult(cp.policy.name, self.invocations, cp.fairness,
-                         cp.pool, cp.util_samples, cp.devices, now,
-                         stats=self.stats, util_integral=cp.util_integral)
+        return now
 
     def _arm_timer(self, now: float) -> None:
         """Schedule the next anticipatory-TTL lapse as an event so the
         policy's Active->Inactive transitions (and the memory swap-outs
         they trigger) happen on time. One pending timer suffices — the
         earliest — since its handler re-arms; ``_armed`` keeps revived
-        queues from re-queueing a time that is already scheduled."""
-        due = self.control.policy.next_expiry(now)
-        if due is not None \
-                and (not self._armed or due < min(self._armed)):
-            self._armed.add(due)
+        queues from re-queueing a time that is already scheduled. Armed
+        times are tracked as a strictly-decreasing stack, so the
+        currently-earliest is ``[-1]`` in O(1) (the seed's set +
+        ``min()`` scan was O(|armed|) per event). The ``bound`` hint (an
+        O(1) early-out inside the policy's expiry index) is withheld in
+        per_event mode so the reference keeps the pre-PR full-peek
+        cost."""
+        armed = self._armed
+        due = self.control.policy.next_expiry(
+            now, armed[-1] if armed and self._transition else None)
+        if due is not None and (not armed or due < armed[-1]):
+            armed.append(due)
             self._push(due, self.TIMER, None)
 
     def _realize(self, d: DispatchDecision, now: float) -> None:
@@ -140,16 +225,111 @@ class SimExecutor:
         overhead = d.ready - now
         if d.start_type == "cold":
             overhead += spec.cold_init
-        demand_sum = sum(dev.demands.values())  # includes this invocation
+        if self._transition:            # cached (recomputed on change)
+            demand_sum = dev.demand_total()     # includes this invocation
+        else:                           # pre-PR reference: fresh dict sum
+            demand_sum = sum(dev.demands.values())
         stretch = 1.0 + self.config.beta * max(0.0, demand_sum - 1.0)
         service = spec.warm_time * d.mem_mult * stretch
 
+        start = now + overhead
+        completion = start + service
         inv.overhead = overhead
-        inv.exec_start = now + overhead
+        inv.exec_start = start
         inv.service_time = service
-        inv.completion = inv.exec_start + service
+        inv.completion = completion
         dev.busy_time += service
-        self._push(inv.completion, self.COMPLETE, inv)
+        heapq.heappush(self._heap,
+                       (completion, self.COMPLETE, next(self._seq), inv))
+
+    def run_profiled(self, trace) -> RunResult:
+        """``run`` with a per-event cost breakdown (benchmarks.scale
+        --event-profile): wall time per loop segment accumulates into
+        ``self.event_ns``:
+
+          heap      event pop + next-arrival pull/push
+          arrival   ControlPlane.on_arrival
+          complete  ControlPlane.on_complete (+ lean stats record)
+          dispatch  the drain loop: choose/place/admit/pool/mem/realize,
+                    including DispatchEvent construction when emitted
+          sample    ControlPlane.sample
+          timer     next_expiry peek + timer arming
+          bus       time inside EventBus.emit_* (subset of the above;
+                    ~0 under sampling="transition" with no subscribers —
+                    the fast path never constructs or emits)
+
+        Instrumented and therefore slower than ``run``; results are
+        bit-identical (the clock reads do not feed the model)."""
+        cp = self.control
+        clock = time.perf_counter_ns
+        ns = self.event_ns = {k: 0 for k in (
+            "heap", "arrival", "complete", "dispatch", "sample", "timer",
+            "bus")}
+        it = iter(trace)        # may raise: must precede the bus wrapping
+        bus = cp.bus
+        wrapped = ("emit_state_change", "emit_dispatch", "emit_complete")
+        for name in wrapped:
+            def timed(ev, _orig=getattr(bus, name)):
+                t0 = clock()
+                _orig(ev)
+                ns["bus"] += clock() - t0
+            setattr(bus, name, timed)
+        now = 0.0
+        armed = self._armed
+        heap = self._heap
+        use_drain = not (self.batch and self._transition)
+        try:
+            self._pull_arrival(it)
+            while heap:
+                t0 = clock()
+                now, kind, _, payload = heapq.heappop(heap)
+                ns["heap"] += clock() - t0
+                self.events += 1
+                if kind == self.ARRIVAL:
+                    t0 = clock()
+                    cp.on_arrival(payload, now)
+                    t1 = clock()
+                    self._pull_arrival(it)
+                    t2 = clock()
+                    ns["arrival"] += t1 - t0
+                    ns["heap"] += t2 - t1
+                elif kind == self.COMPLETE:
+                    t0 = clock()
+                    cp.on_complete(payload, now)
+                    if self.lean:
+                        self.stats.record(payload)
+                    ns["complete"] += clock() - t0
+                else:
+                    armed.pop()
+                t0 = clock()
+                if use_drain and self.batch:
+                    cp.drain(now, realize=lambda d: self._realize(d, now))
+                elif use_drain:
+                    while True:
+                        decision = cp.try_dispatch(now)
+                        if decision is None:
+                            break
+                        self._realize(decision, now)
+                else:
+                    while True:
+                        d = cp.dispatch_once(now)
+                        if d is None:
+                            break
+                        self._realize(d, now)
+                t1 = clock()
+                cp.sample(now)
+                t2 = clock()
+                self._arm_timer(now)
+                t3 = clock()
+                ns["dispatch"] += t1 - t0
+                ns["sample"] += t2 - t1
+                ns["timer"] += t3 - t2
+        finally:
+            for name in wrapped:
+                delattr(bus, name)  # restore the class methods
+        return RunResult(cp.policy.name, self.invocations, cp.fairness,
+                         cp.pool, cp.util_samples, cp.devices, now,
+                         stats=self.stats, util_integral=cp.util_integral)
 
 
 class WallClockExecutor:
@@ -165,6 +345,11 @@ class WallClockExecutor:
         self._wake = threading.Event()
         self._stop = threading.Event()
         self._lock = threading.RLock()
+        # signaled (under _lock) after every completion: drain() waits on
+        # this instead of burning CPU in a sleep/poll loop — the drained
+        # condition (no pending, no inflight) can only become true at a
+        # completion
+        self._idle = threading.Condition(self._lock)
         workers = max(config.d * config.n_devices, 1)
         self._pool = ThreadPoolExecutor(max_workers=workers + 1)
         self._dispatcher: Optional[threading.Thread] = None
@@ -228,13 +413,16 @@ class WallClockExecutor:
         self._dispatcher.start()
 
     def drain(self, timeout: float = 300.0) -> None:
-        t0 = time.monotonic()
-        while time.monotonic() - t0 < timeout:
-            with self._lock:
-                if self.control.total_pending == 0 and self._inflight == 0:
-                    return
-            time.sleep(0.01)
-        raise TimeoutError("engine did not drain")
+        """Block until no work is pending or in flight. Waits on the
+        completion condition variable (the old implementation polled at
+        10 ms, burning a core for the length of any long real run)."""
+        deadline = time.monotonic() + timeout
+        with self._idle:
+            while self.control.total_pending != 0 or self._inflight != 0:
+                remaining = deadline - time.monotonic()
+                if remaining <= 0:
+                    raise TimeoutError("engine did not drain")
+                self._idle.wait(remaining)
 
     def stop(self) -> RunResult:
         self._stop.set()
@@ -255,21 +443,25 @@ class WallClockExecutor:
                 self._wake.wait(timeout=0.05)
                 self._wake.clear()
 
+    def _realize_decision(self, decision) -> None:
+        """Hand one decision to the worker pool (hoisted out of
+        ``_dispatch_batch`` so the dispatcher loop does not allocate a
+        closure per pass). Callers hold ``_lock``."""
+        self._inflight += 1
+        self._pool.submit(self._execute, decision)
+
     def _dispatch_batch(self) -> bool:
         """One dispatcher-thread pass (paper §5): drain every dispatchable
         invocation under a single lock acquisition instead of re-taking
         the lock (and re-entering the control plane) once per token."""
-        def realize(decision) -> None:
-            self._inflight += 1
-            self._pool.submit(self._execute, decision)
-
         with self._lock:
             if getattr(self.config, "batch_dispatch", True):
-                return bool(self.control.drain(self.now(), realize=realize))
+                return bool(self.control.drain(
+                    self.now(), realize=self._realize_decision))
             decision = self.control.try_dispatch(self.now())
             if decision is None:
                 return False
-            realize(decision)
+            self._realize_decision(decision)
             return True
 
     def _execute(self, d: DispatchDecision) -> None:
@@ -298,6 +490,7 @@ class WallClockExecutor:
                 self.control.on_complete(inv, now)
                 self.control.sample(now)
                 self._inflight -= 1
+                self._idle.notify_all()
             self._wake.set()
 
 

@@ -35,21 +35,24 @@ class StreamingStats:
         self._rng = random.Random(seed)
 
     def record(self, inv: Invocation) -> None:
-        lat = inv.latency
-        self.n += 1
+        lat = inv.completion - inv.arrival      # inv.latency, no property
+        n = self.n = self.n + 1
         self.latency_sum += lat
         if lat > self.latency_max:
             self.latency_max = lat
-        self.start_types[inv.start_type] = \
-            self.start_types.get(inv.start_type, 0) + 1
-        self.service_by_fn[inv.fn_id] = \
-            self.service_by_fn.get(inv.fn_id, 0.0) + inv.service_time
-        if len(self._reservoir) < self.RESERVOIR:
-            self._reservoir.append(lat)
+        st = self.start_types
+        key = inv.start_type
+        st[key] = st.get(key, 0) + 1
+        sv = self.service_by_fn
+        key = inv.fn_id
+        sv[key] = sv.get(key, 0.0) + inv.service_time
+        res = self._reservoir
+        if len(res) < self.RESERVOIR:
+            res.append(lat)
         else:
-            j = self._rng.randrange(self.n)
+            j = self._rng.randrange(n)
             if j < self.RESERVOIR:
-                self._reservoir[j] = lat
+                res[j] = lat
 
     def mean_latency(self) -> float:
         return self.latency_sum / self.n if self.n else 0.0

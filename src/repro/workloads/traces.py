@@ -27,15 +27,17 @@ import heapq
 import math
 import random
 import zlib
-from dataclasses import dataclass
-from typing import (Callable, Dict, Iterable, Iterator, List, Optional,
-                    Tuple)
+from typing import (Callable, Dict, Iterable, Iterator, List, NamedTuple,
+                    Optional, Tuple)
 
 from repro.workloads.spec import DEFAULT_MIX, FunctionSpec, function_copies
 
 
-@dataclass(frozen=True)
-class TraceEvent:
+class TraceEvent(NamedTuple):
+    """One arrival. A NamedTuple, not a frozen dataclass: the streaming
+    generators allocate one per arrival on the simulator's hot path, and
+    frozen-dataclass construction (object.__setattr__ per field) costs
+    ~4x a tuple."""
     time: float
     fn_id: str
 

@@ -1,0 +1,225 @@
+"""Event-loop fixed-cost satellites: EventBus no-subscriber fast path,
+``Invocation.__slots__``, the earliest-armed-timer stack, and the
+wall-clock drain condition variable."""
+import threading
+import time
+import tracemalloc
+
+import pytest
+
+from repro.memory.manager import GB
+from repro.runtime.invocation import Invocation
+from repro.server import ServerConfig, StubEndpoint, make_server
+from repro.server.events import EventBus, DispatchEvent
+from repro.workloads.spec import DEFAULT_MIX, FunctionSpec, function_copies
+from repro.workloads.traces import zipf_trace
+
+FNS = function_copies(DEFAULT_MIX, 8)
+TRACE = zipf_trace(FNS, duration=80.0, total_rps=4.0, seed=5)
+
+
+def _server(**kw):
+    cfg = ServerConfig(policy="mqfq-sticky", policy_kwargs={"T": 10.0},
+                       d=2, **kw)
+    return make_server(cfg, fns=FNS)
+
+
+class TestEventBusFastPath:
+    def test_no_subscriber_run_emits_nothing_but_completes(self):
+        srv = _server()
+        res = srv.run_trace(TRACE)
+        assert res.completed_count == len(TRACE)
+        # fast path active: the control plane saw empty subscriber lists
+        assert not srv.bus._dispatch and not srv.bus._complete
+
+    def test_subscribers_fire_with_full_records(self):
+        """Registering a callback (even after construction — the control
+        plane caches the list objects, not their state) must disable the
+        fast path and deliver one well-formed record per event."""
+        srv = _server()
+        dispatches, completes, states = [], [], []
+        srv.bus.on_dispatch(lambda ev: dispatches.append(ev))
+        srv.bus.on_complete(lambda ev: completes.append(ev))
+        srv.bus.on_state_change(lambda ev: states.append(ev))
+        res = srv.run_trace(TRACE)
+        assert len(dispatches) == len(completes) == res.completed_count
+        assert states, "MQFQ-Sticky runs must emit queue-state changes"
+        by_id = {i.inv_id: i for i in res.invocations}
+        for ev in dispatches:
+            inv = by_id[ev.inv.inv_id]
+            assert (ev.fn_id, ev.device_id, ev.start_type, ev.time) == \
+                (inv.fn_id, inv.device_id, inv.start_type,
+                 inv.dispatch_time)
+        for ev in completes:
+            assert ev.time == by_id[ev.inv.inv_id].completion
+
+    def test_mid_run_subscription_takes_effect(self):
+        """The cached subscriber-list references must observe appends
+        made after the ControlPlane was built."""
+        srv = _server()
+        seen = []
+        first = TRACE[: len(TRACE) // 2]
+        # subscribe from inside a state-change callback? simpler: run one
+        # trace half, subscribe, run the second half via a fresh server —
+        # instead verify the cheap invariant directly: the CP's cached
+        # list IS the bus list object.
+        cp = srv.control
+        assert cp._dispatch_subs is srv.bus._dispatch
+        srv.bus.on_dispatch(lambda ev: seen.append(ev.inv.inv_id))
+        assert cp._dispatch_subs, "append must be visible through cache"
+        srv.run_trace(first)
+        assert seen, "subscriber registered post-construction never fired"
+
+    def test_per_event_mode_constructs_even_without_subscribers(self):
+        """sampling='per_event' preserves the pre-PR unconditional
+        emission (cost reference); verify via a counting wrapper."""
+        srv = _server(sampling="per_event")
+        count = 0
+        orig = srv.bus.emit_dispatch
+
+        def counting(ev):
+            nonlocal count
+            count += 1
+            orig(ev)
+        srv.bus.emit_dispatch = counting
+        res = srv.run_trace(TRACE)
+        assert count == res.completed_count
+
+
+class TestInvocationSlots:
+    def test_no_instance_dict(self):
+        inv = Invocation("f", 0.0)
+        assert not hasattr(inv, "__dict__")
+        with pytest.raises(AttributeError):
+            inv.some_unknown_attribute = 1
+
+    def test_lifecycle_fields_are_declared(self):
+        inv = Invocation("f", 0.0)
+        inv.charged_tau = 0.25          # set at dispatch by FlowQueue
+        inv.request = {"seed": 1}       # set by the wall-clock executor
+        assert inv.charged_tau == 0.25 and inv.request == {"seed": 1}
+
+    def test_event_records_are_slotted(self):
+        ev = DispatchEvent(Invocation("f", 0.0), "f", 0, "warm", 0.0)
+        assert not hasattr(ev, "__dict__")
+
+    def test_per_invocation_memory(self):
+        """~45% smaller records: 50k slotted invocations must fit well
+        under the dict-based footprint (~400 B each before)."""
+        n = 50_000
+        tracemalloc.start()
+        before, _ = tracemalloc.get_traced_memory()
+        invs = [Invocation(f"f{i % 7}", float(i), inv_id=i)
+                for i in range(n)]
+        after, _ = tracemalloc.get_traced_memory()
+        tracemalloc.stop()
+        per_inv = (after - before) / n
+        assert len(invs) == n
+        assert per_inv < 260, f"{per_inv:.0f} B/invocation — slots lost?"
+
+
+class TestArmedTimerStack:
+    def test_armed_times_form_a_decreasing_stack(self):
+        """_arm_timer only arms strictly-earlier times, so the armed list
+        is strictly decreasing and the earliest is [-1] — O(1), replacing
+        the seed's min() scan over a set (O(|armed|) per event, quadratic
+        under many in-flight TTL timers)."""
+        from repro.server.executors import SimExecutor
+
+        class ScriptedPolicy:
+            """next_expiry returns a scripted sequence."""
+            def __init__(self, values):
+                self.values = list(values)
+
+            def next_expiry(self, now, bound=None):
+                return self.values.pop(0) if self.values else None
+
+        class FakeControl:
+            def __init__(self, policy):
+                self.policy = policy
+
+        ex = SimExecutor.__new__(SimExecutor)
+        ex._heap, ex._armed = [], []
+        import itertools
+        ex._seq = itertools.count()
+        ex._transition = True
+        ex.control = FakeControl(ScriptedPolicy([9.0, 9.0, 7.0, 8.0, 3.0]))
+        for now in range(5):
+            ex._arm_timer(float(now))
+        # 9.0 armed once (dup suppressed), 8.0 not armed (9>8? no: 8<9 ->
+        # armed after 7.0? 8.0 > 7.0 so suppressed), 7.0 and 3.0 armed
+        assert ex._armed == [9.0, 7.0, 3.0]
+        assert ex._armed[-1] == min(ex._armed)
+        # timers fire smallest-first == LIFO pop order
+        fired = sorted(t for t, _, _, _ in ex._heap)
+        assert fired == [3.0, 7.0, 9.0]
+        for _ in fired:
+            ex._armed.pop()
+        assert ex._armed == []
+
+    def test_ttl_storm_keeps_armed_bounded(self):
+        """Many idle queues with staggered TTLs: the armed stack stays
+        tiny because only strictly-earlier times are admitted."""
+        srv = _server()
+        srv.run_trace(TRACE)
+        assert len(srv.executor._armed) <= 4
+
+
+class TestWallClockDrain:
+    def _fns(self):
+        return {f"f{i}": FunctionSpec(f"f{i}", warm_time=0.01,
+                                      cold_init=0.0, mem_bytes=1024,
+                                      demand=0.2) for i in range(3)}
+
+    def test_drain_returns_after_completion(self):
+        fns = self._fns()
+        eps = {f: StubEndpoint(f, s) for f, s in fns.items()}
+        srv = make_server(ServerConfig(executor="wallclock",
+                                       policy="mqfq-sticky",
+                                       policy_kwargs={"T": 5.0}, d=2),
+                          endpoints=eps, fns=fns)
+        srv.start()
+        for f in fns:
+            srv.submit(f)
+        srv.drain(timeout=30.0)
+        res = srv.stop()
+        assert res.completed_count == len(fns)
+
+    def test_drain_timeout_raises_without_busy_wait(self):
+        """Pending work that can never finish (dispatcher not started):
+        drain must block on the condition variable and raise at the
+        deadline — not poll-spin."""
+        fns = self._fns()
+        eps = {f: StubEndpoint(f, s) for f, s in fns.items()}
+        srv = make_server(ServerConfig(executor="wallclock",
+                                       policy="mqfq-sticky",
+                                       policy_kwargs={"T": 5.0}, d=1),
+                          endpoints=eps, fns=fns)
+        srv.submit("f0")                 # no start(): nothing will run
+        t0 = time.monotonic()
+        cpu0 = time.process_time()
+        with pytest.raises(TimeoutError):
+            srv.drain(timeout=0.4)
+        wall = time.monotonic() - t0
+        cpu = time.process_time() - cpu0
+        assert wall >= 0.35
+        # a condition-variable wait burns (almost) no CPU; the old 10 ms
+        # poll loop burned a measurable slice of the wait
+        assert cpu < 0.25 * wall, f"drain spun: {cpu:.3f}s CPU in {wall:.3f}s"
+        srv.executor._pool.shutdown(wait=False)
+
+    def test_completion_notifies_waiting_drain(self):
+        """drain() blocked on the condition must wake promptly when the
+        last completion lands (not only at the timeout)."""
+        fns = self._fns()
+        eps = {f: StubEndpoint(f, s, delay=0.05) for f, s in fns.items()}
+        srv = make_server(ServerConfig(executor="wallclock",
+                                       policy="mqfq-sticky",
+                                       policy_kwargs={"T": 5.0}, d=1),
+                          endpoints=eps, fns=fns)
+        srv.start()
+        srv.submit("f0")
+        t0 = time.monotonic()
+        srv.drain(timeout=30.0)
+        assert time.monotonic() - t0 < 5.0
+        srv.stop()

@@ -1,0 +1,190 @@
+"""Differential test: the transition-driven control plane must be
+bit-identical to the retained per-event reference.
+
+``ServerConfig.sampling="transition"`` (the default after this change)
+replaces every per-event recomputation with caches invalidated on actual
+transitions: utilization behind demand dirty-flags, the dynamic-D /
+``device_parallelism`` sync on real budget moves, fairness rolls behind
+a deadline check, EventBus records constructed only for subscribers, the
+executor's inlined allocation-free drain loop, the single-pass
+``pick_device`` and the guarded deferred-transition scan.
+``sampling="per_event"`` keeps the pre-PR code paths alive (same
+convention as ``core/reference.py`` / ``memory/reference.py``): per-event
+device scans with fresh list/dict traffic, unconditional ``maybe_roll``
++ EMA feedback + min-sync, unconditional event-record construction, the
+per-event ``drain`` closure, the list-building device picker, the
+unguarded deferred scan and the unbounded timer peek.
+
+We assert *bit-identical* ``RunResult``s — every invocation field, the
+utilization integral and sample trace, fairness windows, warm-pool and
+device/memory accounting, and the decision count — across the paper's
+policy family x dynamic-D x memory pressure, per the PR-2/PR-3
+equivalence-matrix convention.
+"""
+import pytest
+
+from repro.core.policies import make_policy
+from repro.memory.manager import GB
+from repro.server import ServerConfig, make_server
+from repro.workloads.spec import DEFAULT_MIX, function_copies
+from repro.workloads.traces import azure_trace, zipf_trace
+
+N_FNS = 16
+FNS = function_copies(DEFAULT_MIX, N_FNS)
+TRACES = {
+    "zipf": zipf_trace(FNS, duration=150.0, total_rps=4.0, seed=1),
+    "azure": azure_trace(FNS, duration=200.0, trace_id=3),
+}
+
+
+def replay(policy_name, trace_name, sampling, policy_kwargs=None,
+           subscribe=False, **server_kw):
+    cfg = ServerConfig(sampling=sampling, **server_kw)
+    policy = make_policy(policy_name, **(policy_kwargs or {}))
+    srv = make_server(cfg, fns=FNS, policy=policy)
+    events = []
+    if subscribe:
+        srv.bus.on_dispatch(lambda ev: events.append(
+            ("d", ev.inv.inv_id, ev.fn_id, ev.device_id, ev.start_type,
+             ev.time)))
+        srv.bus.on_complete(lambda ev: events.append(
+            ("c", ev.inv.inv_id, ev.fn_id, ev.device_id, ev.time)))
+        srv.bus.on_state_change(lambda ev: events.append(
+            ("s", ev.fn_id, ev.old.value, ev.new.value, ev.time)))
+    res = srv.run_trace(TRACES[trace_name])
+    return srv, res, events
+
+
+def fingerprint(srv, res, dynamic_d=False):
+    """Every observable the acceptance criteria name, exact floats."""
+    out = {
+        "invocations": [
+            (i.inv_id, i.fn_id, i.arrival, i.dispatch_time, i.exec_start,
+             i.completion, i.start_type, i.overhead, i.service_time,
+             i.device_id, i.charged_tau)
+            for i in res.invocations],
+        "util_integral": res.util_integral,
+        "util_samples": res.util_samples,
+        "duration": res.duration,
+        "decisions": srv.control.policy.decisions,
+        "events": srv.executor.events,
+        "fairness_windows": [
+            (w.t0, w.t1, w.max_gap, w.bound, w.service, w.backlogged)
+            for w in res.fairness.windows],
+        "pool": (res.pool.cold_starts, res.pool.warm_starts,
+                 res.pool.host_warm_starts, res.pool.evictions),
+        "devices": [
+            (d.busy_time, d.tokens.current_d, d.tokens.outstanding,
+             d.running_bytes, dict(d.running_fn_count),
+             d.mem.bytes_uploaded, d.mem.bytes_evicted,
+             d.mem.prefetch_count, d.mem.used)
+            for d in res.devices],
+    }
+    if dynamic_d:
+        # under dynamic D the EMA feedback is the control signal and must
+        # match sample for sample; with static D transition mode (by
+        # design) does not maintain the telemetry-only EMA
+        out["ema"] = [(d.tokens.util, d.tokens.util_avg)
+                      for d in res.devices]
+    return out
+
+
+def assert_equivalent(policy_name, trace_name, policy_kwargs=None,
+                      subscribe=False, **server_kw):
+    dyn = server_kw.get("dynamic_d", False)
+    fast = replay(policy_name, trace_name, "transition", policy_kwargs,
+                  subscribe, **server_kw)
+    ref = replay(policy_name, trace_name, "per_event", policy_kwargs,
+                 subscribe, **server_kw)
+    a = fingerprint(fast[0], fast[1], dyn)
+    b = fingerprint(ref[0], ref[1], dyn)
+    for key in b:
+        assert a[key] == b[key], f"{key} diverged"
+    if subscribe:
+        for i, (x, y) in enumerate(zip(fast[2], ref[2])):
+            assert x == y, f"event record #{i} diverged: {x} vs {y}"
+        assert len(fast[2]) == len(ref[2])
+
+
+@pytest.mark.parametrize("trace_name", ["zipf", "azure"])
+@pytest.mark.parametrize("policy_name,policy_kwargs", [
+    ("mqfq-sticky", {"T": 10.0}),
+    ("mqfq-sticky", {"T": 0.0}),
+    ("mqfq", {"T": 10.0, "seed": 7}),
+    ("sfq", {}),
+    ("fcfs", {}),
+    ("sjf", {}),
+])
+def test_policy_matrix(policy_name, policy_kwargs, trace_name):
+    """Anticipatory family + non-anticipatory baselines: the transition
+    sampler must be exact for both the queue-state-driven and the
+    arrival/completion-driven memory hook paths."""
+    assert_equivalent(policy_name, trace_name, policy_kwargs,
+                      d=2, n_devices=2)
+
+
+@pytest.mark.parametrize("mem_policy", ["ondemand", "madvise", "prefetch",
+                                        "prefetch_swap"])
+def test_memory_pressure(mem_policy):
+    """Tight memory: admission refusals, evictions and host_warm reloads
+    must interleave identically under every Fig.-4 policy."""
+    assert_equivalent("mqfq-sticky", "azure", {"T": 5.0}, d=2,
+                      n_devices=2, mem_policy=mem_policy,
+                      capacity_bytes=3 * GB, pool_size=8)
+
+
+@pytest.mark.parametrize("trace_name", ["zipf", "azure"])
+def test_dynamic_d(trace_name):
+    """Dynamic D: the per-event EMA is the control signal, so transition
+    mode must keep feeding it sample-for-sample (current_d trajectories
+    and the EMA state itself must match exactly)."""
+    assert_equivalent("mqfq-sticky", trace_name, {"T": 10.0}, d=3,
+                      n_devices=2, dynamic_d=True)
+
+
+def test_dynamic_d_under_pressure():
+    assert_equivalent("mqfq-sticky", "azure", {"T": 5.0}, d=3,
+                      n_devices=2, dynamic_d=True,
+                      capacity_bytes=3 * GB, pool_size=8)
+
+
+def test_event_records_identical_with_subscribers():
+    """Subscribing flips the fast path off: the records the transition
+    mode then constructs must equal the reference's, field for field,
+    in the same order."""
+    assert_equivalent("mqfq-sticky", "azure", {"T": 10.0}, subscribe=True,
+                      d=2, n_devices=2)
+
+
+def test_lean_metrics_equivalent():
+    """metrics='lean': the StreamingStats aggregates must match too."""
+    kw = dict(d=2, n_devices=2, metrics="lean")
+    fast = replay("mqfq-sticky", "azure", "transition", {"T": 10.0}, **kw)
+    ref = replay("mqfq-sticky", "azure", "per_event", {"T": 10.0}, **kw)
+    for r in (fast, ref):
+        assert not r[1].invocations
+    a, b = fast[1].stats, ref[1].stats
+    assert (a.n, a.latency_sum, a.latency_max) \
+        == (b.n, b.latency_sum, b.latency_max)
+    assert a.start_types == b.start_types
+    assert a.service_by_fn == b.service_by_fn
+    assert a._reservoir == b._reservoir
+    assert fast[1].util_integral == ref[1].util_integral
+
+
+def test_legacy_per_token_loop_equivalent():
+    """batch_dispatch=False (the seed's one-try_dispatch-per-call loop)
+    must still produce the same results under transition sampling."""
+    kw = dict(d=2, n_devices=2)
+    fast = replay("mqfq-sticky", "azure", "transition", {"T": 10.0},
+                  batch_dispatch=False, **kw)
+    ref = replay("mqfq-sticky", "azure", "per_event", {"T": 10.0}, **kw)
+    a = fingerprint(fast[0], fast[1])
+    b = fingerprint(ref[0], ref[1])
+    for key in b:
+        assert a[key] == b[key], f"{key} diverged"
+
+
+def test_unknown_sampling_mode_rejected():
+    with pytest.raises(ValueError, match="sampling"):
+        make_server(ServerConfig(sampling="sometimes"), fns=FNS)
