@@ -149,6 +149,19 @@ class SchedulerIndex:
             heapq.heappop(h)
             yield q
 
+    def min_pending_vt(self) -> Optional[float]:
+        """Raw min VT over queues with pending work (validate-and-discard
+        on the gvt heap), or None when nothing is pending. The shard-sync
+        export: ``Policy.min_pending_vt`` lifts it to the policy's
+        monotone Global_VT before publication."""
+        h = self._gvt
+        while h:
+            vt, _, q = h[0]
+            if q.pending and q.vt == vt:
+                return vt
+            heapq.heappop(h)
+        return None
+
     def best_candidate(self, parallelism: int) -> Optional[FlowQueue]:
         """The reference's ``cand[0]`` after its stable sorts: max-len
         (ins tie-break) at D==1, min-in-flight-then-max-len at D!=1. The

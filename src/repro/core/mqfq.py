@@ -214,6 +214,25 @@ class MQFQSticky(Policy):
         self.index.note_pending_vt(q)   # deficit settle may move VT
         self._update_state(q, now)
 
+    # -- cross-shard virtual-time sync -----------------------------------------
+    def min_pending_vt(self) -> Optional[float]:
+        """This shard's contribution to the cross-shard Global_VT
+        snapshot: the min pending start tag lifted to the local
+        (monotone) Global_VT — i.e. exactly where ``_refresh_global_vt``
+        would put the floor, read without mutating it."""
+        vt = self.index.min_pending_vt()
+        if vt is None:
+            return None
+        return vt if vt > self.global_vt else self.global_vt
+
+    def raise_vt_floor(self, floor: float) -> None:
+        """Epoch sync: adopt the cross-shard max-of-mins floor. Global_VT
+        is monotone, so a stale (lower) floor is a no-op; throttled
+        queues released by the raise fire at the next ``choose`` via the
+        deferred-transition guard, exactly as after a local advance."""
+        if floor > self.global_vt:
+            self.global_vt = floor
+
     # -- executor integration --------------------------------------------------
     def next_expiry(self, now: float,
                     bound: Optional[float] = None) -> Optional[float]:

@@ -59,6 +59,24 @@ class Policy:
         have none."""
         return None
 
+    # -- cross-shard virtual-time sync ---------------------------------------
+    # The sharded control plane periodically collects every shard's
+    # ``min_pending_vt`` and re-injects the max of those minima as a
+    # Global_VT floor (MQFQ's loosely-synchronized global clock across
+    # per-CPU dispatchers). Policies without a virtual clock (FCFS, SJF)
+    # neither publish nor accept a floor, so the sync degenerates to a
+    # no-op for them.
+
+    def min_pending_vt(self) -> Optional[float]:
+        """Min start tag over this policy's queues with pending work —
+        the shard's contribution to the cross-shard Global_VT snapshot.
+        None when nothing is pending (or the policy has no VT)."""
+        return None
+
+    def raise_vt_floor(self, floor: float) -> None:
+        """Inject an external Global_VT floor (monotone raise). No-op for
+        policies without a virtual clock."""
+
     # -- shared accounting ---------------------------------------------------
     @property
     def total_pending(self) -> int:

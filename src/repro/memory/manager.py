@@ -60,11 +60,18 @@ class Region:
 class DeviceMemoryManager:
     def __init__(self, capacity_bytes: int = 16 * GB,
                  h2d_bw: float = 100 * GB,  # bytes/s DMA
-                 policy: str = "prefetch_swap"):
+                 policy: str = "prefetch_swap",
+                 strict_reclaim: bool = True):
         assert policy in ("ondemand", "madvise", "prefetch", "prefetch_swap")
         self.capacity = capacity_bytes
         self.h2d_bw = h2d_bw
         self.policy = policy
+        # True (default): the second-pass resident sweep replays the
+        # seed's pre-snapshot semantics bug-for-bug, re-counting the
+        # phase-1 victims (see _evict_resident_sweep). False: the sweep
+        # walks only regions still resident — each victim is evicted
+        # (and its bytes counted, listeners notified) exactly once.
+        self.strict_reclaim = strict_reclaim
         # policy predicates, precomputed off the per-dispatch acquire path
         self._paged = policy in ("ondemand", "madvise")
         self._madvise = policy == "madvise"
@@ -172,7 +179,9 @@ class DeviceMemoryManager:
             heapq.heappush(h, e)
         if self.free_bytes() >= need:
             return True
-        return self._evict_resident_sweep(need, victims, protect)
+        if self.strict_reclaim:
+            return self._evict_resident_sweep(need, victims, protect)
+        return self._evict_resident_clean(need, protect)
 
     def _evict_resident_sweep(self, need: int, victims: List[Region],
                               protect: Tuple[str, ...]) -> bool:
@@ -219,6 +228,36 @@ class DeviceMemoryManager:
         for e in skipped:
             heapq.heappush(h, e)
         return ok or self.free_bytes() >= need
+
+    def _evict_resident_clean(self, need: int,
+                              protect: Tuple[str, ...]) -> bool:
+        """Second pass, ``strict_reclaim=False``: sweep only the regions
+        still resident after phase 1. Phase-1 victims are already
+        non-resident, so their heap entries fail validation — no
+        duplicate byte accounting, no duplicate evict-listener
+        callbacks. Still O(log R) per swept region."""
+        h = self._resident_heap
+        skipped: List[Tuple[float, int, str]] = []
+        while self.free_bytes() < need:
+            r: Optional[Region] = None
+            while h:
+                lu, ins, fn = h[0]
+                cand = self.regions.get(fn)
+                if cand is None or not cand.resident or cand.last_use != lu:
+                    heapq.heappop(h)    # stale (incl. phase-1 victims)
+                    continue
+                if fn in protect:
+                    skipped.append(heapq.heappop(h))
+                    continue
+                r = cand
+                break
+            if r is None:
+                break
+            heapq.heappop(h)
+            self._evict_one(r)
+        for e in skipped:
+            heapq.heappush(h, e)
+        return self.free_bytes() >= need
 
     def _notify_evict(self, fn_id: str) -> None:
         for cb in self.evict_listeners:

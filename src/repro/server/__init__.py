@@ -32,8 +32,12 @@ from repro.server.config import ServerConfig, make_server, specs_from_endpoints
 from repro.server.control import ControlPlane, DeviceState, DispatchDecision
 from repro.server.events import (CompleteEvent, DispatchEvent, EventBus,
                                  StateChangeEvent)
-from repro.server.executors import Server, SimExecutor, WallClockExecutor
-from repro.server.metrics import RunResult, StreamingStats
+from repro.server.executors import (Server, ShardedWallClockExecutor,
+                                    SimExecutor, WallClockExecutor)
+from repro.server.metrics import (MergedFairness, MergedPools, RunResult,
+                                  StreamingStats)
+from repro.server.shard import (ArrayVTBus, LocalVTBus, ShardedControlPlane,
+                                ShardRouter, hash_shard)
 from repro.server.stub import StubEndpoint
 
 __all__ = [
@@ -41,5 +45,8 @@ __all__ = [
     "ControlPlane", "DeviceState", "DispatchDecision",
     "EventBus", "StateChangeEvent", "DispatchEvent", "CompleteEvent",
     "Server", "SimExecutor", "WallClockExecutor",
+    "ShardedControlPlane", "ShardedWallClockExecutor", "ShardRouter",
+    "LocalVTBus", "ArrayVTBus", "hash_shard",
+    "MergedFairness", "MergedPools",
     "RunResult", "StreamingStats", "StubEndpoint",
 ]

@@ -55,6 +55,29 @@ class ServerConfig:
     #                  convention as core/reference.py; see
     #                  tests/test_event_loop_equivalence.py
     sampling: str = "transition"
+    # sharded control plane (repro.server.shard): partition the devices
+    # into n_shards groups, each behind its own policy + scheduler index
+    # + memory managers + warm pool + D-tokens + fairness tracker, with
+    # cross-shard fairness via an epoch-synchronized Global_VT floor.
+    #   "none"   — the monolithic ControlPlane, kept verbatim as the
+    #              differential reference (and the default)
+    #   "hash"   — stable crc32(fn_id) % n_shards flow partition
+    #   "sticky" — locality-aware: least-backlogged shard at first
+    #              arrival; rebalanced only when the flow's shard backlog
+    #              exceeds shard_imbalance x the lightest shard's and the
+    #              flow has no queued/in-flight work on its shard
+    sharding: str = "none"
+    n_shards: int = 1                # device groups (divides n_devices)
+    shard_imbalance: float = 2.0     # sticky-router rebalance threshold
+    # cross-shard Global_VT sync epoch: virtual seconds under the sim
+    # executor, wall seconds under the wallclock executor; inter-shard
+    # VT drift is bounded by one epoch's floor advance
+    vt_epoch: float = 0.25
+    # second-pass resident reclaim semantics: True replays the seed's
+    # pre-snapshot sweep bug-for-bug (phase-1 victims re-counted, see
+    # memory/manager.py); False retires the quirk — each victim evicted
+    # and accounted exactly once (indexed device layer only)
+    strict_reclaim: bool = True
     # executor: "sim" (virtual clock) or "wallclock" (threads + JAX)
     executor: str = "sim"
     # metrics: "full" records every invocation + utilization sample;
@@ -82,7 +105,8 @@ def specs_from_endpoints(endpoints, *, demand: float = 0.5
 def make_server(config: ServerConfig, *,
                 fns: Optional[Dict[str, FunctionSpec]] = None,
                 endpoints: Optional[dict] = None,
-                policy: Optional[Policy] = None):
+                policy: Optional[Policy] = None,
+                vt_bus=None, vt_slots=None):
     """Build a Server from a frozen config.
 
     - ``executor="sim"``: requires ``fns``; drive it with
@@ -92,16 +116,46 @@ def make_server(config: ServerConfig, *,
       ``start() / submit() / drain() / stop()``.
     - ``policy``: optional pre-built Policy instance (tests/ablations);
       otherwise built from ``config.policy`` + ``config.policy_kwargs``.
+      A sharded plane builds one policy *per shard* from the config, so
+      a pre-built instance is rejected there.
+    - ``vt_bus`` / ``vt_slots``: external cross-shard VT snapshot for
+      process-per-shard deployments (see ``repro.server.shard``); only
+      meaningful with ``sharding != "none"``.
     """
     from repro.core.policies import make_policy
     from repro.server.control import ControlPlane
     from repro.server.events import EventBus
-    from repro.server.executors import (Server, SimExecutor,
-                                        WallClockExecutor)
+    from repro.server.executors import (Server, ShardedWallClockExecutor,
+                                        SimExecutor, WallClockExecutor)
+    from repro.server.shard import ShardedControlPlane
 
-    if policy is None:
+    if config.sharding not in ("none", "hash", "sticky"):
+        raise ValueError(f"unknown sharding {config.sharding!r}; "
+                         f"expected 'none', 'hash' or 'sticky'")
+    sharded = config.sharding != "none"
+    if not sharded and config.n_shards != 1:
+        raise ValueError("n_shards > 1 requires sharding='hash' or "
+                         "'sticky' (sharding='none' is the monolithic "
+                         "reference plane)")
+    if not sharded and (vt_bus is not None or vt_slots is not None):
+        raise ValueError("vt_bus/vt_slots require sharding='hash' or "
+                         "'sticky': the monolithic plane runs no "
+                         "cross-shard VT sync, so the bus would be "
+                         "silently ignored")
+    if sharded and policy is not None:
+        raise ValueError("a sharded plane builds one policy per shard "
+                         "from config.policy/policy_kwargs; a pre-built "
+                         "policy= instance cannot be shared")
+    if policy is None and not sharded:
         policy = make_policy(config.policy, **dict(config.policy_kwargs))
     bus = EventBus()
+
+    def build_control():
+        if sharded:
+            return ShardedControlPlane(fns, config, bus, vt_bus=vt_bus,
+                                       vt_slots=vt_slots)
+        return ControlPlane(policy, fns, config, bus)
+
     scenario = None
     if config.executor == "sim":
         if fns is None and config.scenario:
@@ -111,7 +165,7 @@ def make_server(config: ServerConfig, *,
             fns = scenario.fns
         if fns is None:
             raise ValueError("sim executor requires fns= (or scenario=)")
-        control = ControlPlane(policy, fns, config, bus)
+        control = build_control()
         executor = SimExecutor(control, config)
     elif config.executor == "wallclock":
         if config.scenario:
@@ -123,8 +177,11 @@ def make_server(config: ServerConfig, *,
             raise ValueError("wallclock executor requires endpoints=")
         if fns is None:
             fns = specs_from_endpoints(endpoints)
-        control = ControlPlane(policy, fns, config, bus)
-        executor = WallClockExecutor(control, endpoints, config)
+        control = build_control()
+        if sharded:
+            executor = ShardedWallClockExecutor(control, endpoints, config)
+        else:
+            executor = WallClockExecutor(control, endpoints, config)
     else:
         raise ValueError(f"unknown executor {config.executor!r}")
     server = Server(config, control, executor, bus)

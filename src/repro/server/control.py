@@ -49,10 +49,14 @@ if TYPE_CHECKING:
 @dataclass(slots=True)
 class DeviceState:
     """One accelerator slice: memory manager + D-token controller +
-    in-flight bookkeeping."""
+    in-flight bookkeeping. ``dev_id`` is globally unique across the
+    whole server (shards of a sharded plane number their devices from a
+    base offset); ``slot`` is the device's index within its own control
+    plane's ``devices`` list — equal to ``dev_id`` when unsharded."""
     dev_id: int
     mem: object                # DeviceMemoryManager (indexed or reference)
     tokens: ConcurrencyController
+    slot: int = 0
     running: Dict[int, str] = field(default_factory=dict)  # inv_id -> fn
     demands: Dict[int, float] = field(default_factory=dict)
     busy_time: float = 0.0
@@ -120,21 +124,37 @@ class DispatchDecision:
 
 class ControlPlane:
     def __init__(self, policy: Policy, fns: Dict[str, FunctionSpec],
-                 config: "ServerConfig", bus: Optional[EventBus] = None):
+                 config: "ServerConfig", bus: Optional[EventBus] = None,
+                 dev_base: int = 0):
         self.policy = policy
         self.fns = fns
         self.config = config
         self.bus = bus or EventBus()
-        mem_cls, pool_cls = make_device_layer(
-            getattr(config, "device_layer", "indexed"))
+        layer = getattr(config, "device_layer", "indexed")
+        mem_cls, pool_cls = make_device_layer(layer)
+        # second-pass reclaim semantics (ServerConfig.strict_reclaim):
+        # the reference layer IS the seed's strict behavior, so the
+        # retired-quirk mode only exists on the indexed manager
+        mem_kw = {}
+        if not getattr(config, "strict_reclaim", True):
+            if layer == "reference":
+                raise ValueError(
+                    "strict_reclaim=False requires device_layer='indexed'"
+                    ": the reference layer is the seed's strict "
+                    "second-pass sweep by definition")
+            mem_kw["strict_reclaim"] = False
         self.pool = pool_cls(config.pool_size)
+        # dev_base: first global device id of this plane's group (shards
+        # of a ShardedControlPlane own disjoint id ranges; 0 unsharded)
+        self._dev_base = dev_base
         self.devices = [
-            DeviceState(i,
+            DeviceState(dev_base + i,
                         mem_cls(config.capacity_bytes,
                                 config.h2d_bw,
-                                config.mem_policy),
+                                config.mem_policy, **mem_kw),
                         ConcurrencyController(max_d=config.d,
-                                              dynamic=config.dynamic_d))
+                                              dynamic=config.dynamic_d),
+                        slot=i)
             for i in range(config.n_devices)]
         T = getattr(policy, "T", 0.0)
         lean = getattr(config, "metrics", "full") == "lean"
@@ -151,7 +171,10 @@ class ControlPlane:
         self._last_u = 0.0
         self._record_util = getattr(config, "metrics", "full") != "lean"
         self._backlogged: set = set()                 # fns with queued/in-flight work
-        self._sticky_dev: Dict[str, int] = {}
+        # queued (not yet dispatched) invocations, maintained O(1) —
+        # the shard router's backlog signal (total_pending is O(F))
+        self.pending_count = 0
+        self._sticky_dev: Dict[str, int] = {}         # fn -> device *slot*
         self._containers: Dict[int, object] = {}
         # optional per-stage wall-time breakdown of the dispatch pipeline
         # (benchmarks/scale.py --stages); off the hot path unless enabled
@@ -219,6 +242,7 @@ class ControlPlane:
     # -- pipeline: arrival -----------------------------------------------------
     def on_arrival(self, inv: Invocation, now: float) -> None:
         self.policy.on_arrival(inv, now)
+        self.pending_count += 1
         self._backlogged.add(inv.fn_id)
         if not self.policy.anticipatory:
             dev = self._fn_device(inv.fn_id)
@@ -308,9 +332,10 @@ class ControlPlane:
         if not dev.mem.admit(fn_id, spec.mem_bytes, dev.running_bytes, now):
             return None  # memory admission control (§4.4)
         inv = q.pop()
+        self.pending_count -= 1
         self.policy.on_dispatch(q, inv, now)
         dev.tokens.acquire()
-        self._sticky_dev[fn_id] = dev.dev_id
+        self._sticky_dev[fn_id] = dev.slot
 
         resident = dev.mem.is_resident(fn_id, now)
         container, start_type = self.pool.acquire(fn_id, now, resident)
@@ -322,7 +347,7 @@ class ControlPlane:
         inv.device_id = dev.dev_id
         dev.note_dispatch(inv.inv_id, fn_id, spec)
         self._agg_dirty = True
-        self._dev_util[dev.dev_id] = dev.utilization()
+        self._dev_util[dev.slot] = dev.utilization()
         decision = DispatchDecision(inv, dev, spec, start_type, ready,
                                     mem_mult)
         if self._dispatch_subs or self._emit_all:
@@ -353,9 +378,10 @@ class ControlPlane:
         if not ok:
             return None
         inv = q.pop()
+        self.pending_count -= 1
         self.policy.on_dispatch(q, inv, now)
         dev.tokens.acquire()
-        self._sticky_dev[fn_id] = dev.dev_id
+        self._sticky_dev[fn_id] = dev.slot
 
         resident = dev.mem.is_resident(fn_id, now)
         t = time.perf_counter_ns()
@@ -371,7 +397,7 @@ class ControlPlane:
         inv.device_id = dev.dev_id
         dev.note_dispatch(inv.inv_id, fn_id, spec)
         self._agg_dirty = True
-        self._dev_util[dev.dev_id] = dev.utilization()
+        self._dev_util[dev.slot] = dev.utilization()
         decision = DispatchDecision(inv, dev, spec, start_type, ready,
                                     mem_mult)
         if self._dispatch_subs or self._emit_all:
@@ -383,10 +409,10 @@ class ControlPlane:
     def on_complete(self, inv: Invocation, now: float) -> None:
         fn_id = inv.fn_id
         policy = self.policy
-        dev = self.devices[inv.device_id]
+        dev = self.devices[inv.device_id - self._dev_base]
         dev.note_complete(inv.inv_id, fn_id, self.fns[fn_id])
         self._agg_dirty = True
-        self._dev_util[dev.dev_id] = dev.utilization()
+        self._dev_util[dev.slot] = dev.utilization()
         dev.tokens.release()
         container = self._containers.pop(inv.inv_id)
         self.pool.release(container, now)

@@ -64,6 +64,67 @@ class StreamingStats:
         return lats[int(q * (len(lats) - 1))]
 
 
+class MergedPools:
+    """Aggregate warm-pool view over a sharded plane's per-shard pools:
+    the counters ``RunResult`` and the benchmarks read, summed across
+    shards. ``pools`` keeps the per-shard objects for drill-down."""
+
+    def __init__(self, pools: List):
+        self.pools = list(pools)
+
+    def _sum(self, attr: str) -> int:
+        return sum(getattr(p, attr) for p in self.pools)
+
+    @property
+    def cold_starts(self) -> int:
+        return self._sum("cold_starts")
+
+    @property
+    def warm_starts(self) -> int:
+        return self._sum("warm_starts")
+
+    @property
+    def host_warm_starts(self) -> int:
+        return self._sum("host_warm_starts")
+
+    @property
+    def evictions(self) -> int:
+        return self._sum("evictions")
+
+    def count(self, fn_id: Optional[str] = None) -> int:
+        return sum(p.count(fn_id) for p in self.pools)
+
+    @property
+    def cold_hit_pct(self) -> float:
+        total = self.cold_starts + self.warm_starts + self.host_warm_starts
+        return 100.0 * self.cold_starts / total if total else 0.0
+
+
+class MergedFairness:
+    """Aggregate fairness view over per-shard ``FairnessTracker``s.
+
+    Fairness windows are evaluated *within* a shard (Eq. 1's bound is a
+    per-dispatcher property — the cross-shard guarantee comes from the
+    epoch-synchronized VT floor, not from comparing flows that never
+    contend for the same devices). ``windows`` is the time-ordered merge
+    of every shard's records; ``trackers`` keeps per-shard access for
+    the drift/stress tests."""
+
+    def __init__(self, trackers: List[FairnessTracker]):
+        self.trackers = list(trackers)
+        self.window = trackers[0].window if trackers else 0.0
+        self.T = trackers[0].T if trackers else 0.0
+        self.D = trackers[0].D if trackers else 0
+
+    @property
+    def windows(self) -> List:
+        import heapq
+        # each tracker appends windows in increasing t0, so the merge is
+        # O(total) per access — no full re-sort
+        return list(heapq.merge(*(t.windows for t in self.trackers),
+                                key=lambda w: (w.t0, w.t1)))
+
+
 @dataclass
 class RunResult:
     policy: str

@@ -60,6 +60,28 @@ class Scenario:
             s = itertools.islice(s, self.max_events)
         return s
 
+    def shard_streams(self, n_shards: int,
+                      route: Optional[Callable[[str], int]] = None
+                      ) -> list:
+        """Per-shard arrival fan-out: the scenario's (bounded) stream
+        split into ``n_shards`` time-sorted sub-streams by ``route``
+        (fn_id -> shard; defaults to the control plane's stable crc32
+        hash router, so a fan-out partition agrees with a
+        ``sharding="hash"`` server's own routing). Each sub-stream is an
+        independent lazy filter over its own replay of the scenario —
+        shard feeders (threads or processes) can consume them without a
+        shared merge lock. ``max_events`` caps the *global* stream
+        before the split, so the union over shards is exactly
+        ``stream()``."""
+        if route is None:
+            from repro.server.shard import hash_shard
+            route = lambda fn_id: hash_shard(fn_id, n_shards)
+
+        def one(k: int) -> Iterator[TraceEvent]:
+            return (ev for ev in self.stream() if route(ev.fn_id) == k)
+
+        return [one(k) for k in range(n_shards)]
+
 
 SCENARIOS: Dict[str, Callable[..., Scenario]] = {}
 
