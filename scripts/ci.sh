@@ -45,6 +45,16 @@ echo "== device-layer speedup gate: indexed vs reference @ 1k flows, memory-pres
 # across three pressure levels; fails below 5x aggregate speedup
 python -m benchmarks.scale --sizes '' --flows 1000 --device-compare 20000
 
+echo "== cold-start data-plane gate: anticipatory prefetch vs keep-alive-only on the llm storm =="
+# the PR-6 gate: staged cold starts + contended H2D links + anticipatory
+# weight prefetch (repro.datapath) against the keep-alive-only baseline
+# (same pipeline, every transfer on the dispatch critical path). The sim
+# is deterministic — one pair, no median. Gates the steady-state
+# cold-start-overhead p99 ratio at >= 1.5x (measured ~2.7x), plus an
+# ungated azure-longtail pair under 8x memory pressure where prefetch
+# must coexist with admission-driven eviction.
+python -m benchmarks.scale --sizes '' --flows 64 --datapath-compare 2000
+
 echo "== shard-scaling gate: 4 shard processes vs 1 on the wall-clock stub workload (best-of-4 pairs) =="
 # process-per-shard wall-clock sweep (1/2/4/8 shards, 8 devices total,
 # cross-shard VT floor via lock-free shared memory). Gated at

@@ -1,0 +1,219 @@
+"""Per-device cold-start data plane: link + staging + memory wiring.
+
+``DeviceDataPath`` owns one device's ``SharedLink`` and ``StagingPool``
+and keeps the ``DeviceMemoryManager``'s view truthful: a region's
+``upload_eta`` always reflects the link's *current* plan (inf while the
+transfer is paused behind demand traffic or queued on staging), and is
+finalized by ``finish_upload`` when the bytes actually land.
+
+Lifecycle of a transfer:
+
+    request(kind="prefetch")  — anticipatory upload (queue activation or
+                                the control plane's drain-prefetch pass)
+    request(kind="demand") /
+    mark_demand()             — a dispatch is waiting on the bytes; the
+                                transfer preempts background prefetches
+    advance(now)              — a TRANSFER event fired: pop completions,
+                                release staging, notify the memory
+                                manager, fire dispatch waiters, start
+                                staging-blocked transfers
+    cancel(fn_id)             — the flow went Inactive or its region was
+                                evicted before dispatch; only background
+                                prefetches (no waiters) are cancellable
+
+The control plane refreshes ``now`` at every event (``datapath_tick``)
+so evict-listener cancellations — which arrive without a timestamp —
+integrate link progress at the right instant.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional
+
+from repro.datapath.link import INF, SharedLink, Transfer
+from repro.memory.pool import StagingPool
+
+
+class DeviceDataPath:
+    def __init__(self, dev_id: int, h2d_bw: float, staging_bytes: int,
+                 mem) -> None:
+        self.dev_id = dev_id
+        self.link = SharedLink(h2d_bw)
+        self.staging = StagingPool(staging_bytes)
+        self.mem = mem
+        self.transfers: Dict[str, Transfer] = {}   # active + queued
+        self.waiting: List[Transfer] = []          # staging-blocked FIFO
+        self.now = 0.0
+        self.n_prefetch = 0        # in-flight (active or queued) prefetches
+        # stats
+        self.demand_transfers = 0
+        self.prefetches_started = 0
+        self.prefetches_upgraded = 0
+        self.prefetches_cancelled = 0
+        self.transfers_completed = 0
+        self.bytes_transferred = 0
+
+    # -- entry points ------------------------------------------------------
+    def request(self, fn_id: str, nbytes: int, now: float,
+                kind: str = "demand", prio: float = 0.0) -> float:
+        """Start (or join) a transfer of fn's weights; returns the
+        planned completion eta (inf while paused or staging-blocked).
+        This is the memory manager's ``uploader`` hook. ``prio`` orders
+        service within the prefetch class (lower = sooner)."""
+        self.now = now
+        t = self.transfers.get(fn_id)
+        if t is not None:
+            if kind == "demand" and t.kind != "demand":
+                self.mark_demand(fn_id, now)
+            return t.eta
+        t = Transfer(fn_id, nbytes, kind, prio)
+        self.transfers[fn_id] = t
+        if kind == "demand":
+            self.demand_transfers += 1
+        else:
+            self.prefetches_started += 1
+            self.n_prefetch += 1
+        if self.staging.reserve(t.nbytes):
+            self.link.add(t, now)
+            self._sync_etas()
+        else:
+            t.queued = True
+            w = self.waiting
+            if kind == "demand":
+                # ahead of queued prefetches, behind earlier demand
+                i = 0
+                while i < len(w) and w[i].kind == "demand":
+                    i += 1
+                w.insert(i, t)
+                self._preempt_for_demand(now)
+            else:
+                # behind demand and better-prio prefetches (FIFO on ties)
+                i = len(w)
+                while i > 0 and w[i - 1].kind != "demand" \
+                        and w[i - 1].prio > prio:
+                    i -= 1
+                w.insert(i, t)
+        return t.eta
+
+    def mark_demand(self, fn_id: str, now: float) -> None:
+        """Upgrade a prefetch to the demand class: a dispatched
+        invocation now waits on it."""
+        t = self.transfers.get(fn_id)
+        if t is None or t.kind == "demand":
+            return
+        self.now = now
+        self.n_prefetch -= 1
+        self.prefetches_upgraded += 1
+        if t.queued:
+            t.kind = "demand"
+            w = self.waiting
+            w.remove(t)
+            i = 0
+            while i < len(w) and w[i].kind == "demand":
+                i += 1
+            w.insert(i, t)
+            self._preempt_for_demand(now)
+        else:
+            self.link.mark_demand(t, now)
+            self._sync_etas()
+
+    def cancel(self, fn_id: str, now: float) -> bool:
+        """Abort a background prefetch (flow went Inactive). Demand
+        transfers and transfers with dispatch waiters are not
+        cancellable — an invocation depends on them."""
+        t = self.transfers.get(fn_id)
+        if t is None or t.kind == "demand" or t.waiters:
+            return False
+        del self.transfers[fn_id]
+        self.n_prefetch -= 1
+        self.prefetches_cancelled += 1
+        if t.queued:
+            self.waiting.remove(t)
+        else:
+            self.link.remove(t, now)
+            self.staging.release(t.nbytes)
+            self._start_waiting(now)
+            self._sync_etas()
+        return True
+
+    def on_region_evicted(self, fn_id: str) -> None:
+        """Memory-manager evict listener: a prefetch-in-flight region
+        was reclaimed under pressure — abort its transfer. (Regions of
+        dispatched transfers have waiters, so ``cancel`` refuses and the
+        upload keeps accounting/reality reconcilable at completion.)"""
+        self.cancel(fn_id, self.now)
+
+    # -- event-loop surface -------------------------------------------------
+    def next_eta(self) -> Optional[float]:
+        return self.link.next_eta()
+
+    def advance(self, now: float) -> List[Transfer]:
+        """Realize every transfer completed by ``now``."""
+        self.now = now
+        done = self.link.pop_completed(now)
+        if not done:
+            return done
+        mem = self.mem
+        for t in done:
+            del self.transfers[t.fn_id]
+            if t.kind != "demand":
+                self.n_prefetch -= 1
+            self.staging.release(t.nbytes)
+            self.transfers_completed += 1
+            self.bytes_transferred += t.nbytes
+            mem.finish_upload(t.fn_id, now)
+        self._start_waiting(now)
+        self._sync_etas()
+        for t in done:
+            for cb in t.waiters:
+                cb(now)
+        return done
+
+    # -- internals ----------------------------------------------------------
+    def _start_waiting(self, now: float) -> None:
+        """Move staging-blocked transfers onto the link, demand class
+        first, stopping at the first that still does not fit (strict
+        FIFO within class: small transfers cannot starve a big one)."""
+        w = self.waiting
+        while w:
+            t = w[0]
+            if not self.staging.reserve(t.nbytes):
+                break
+            w.pop(0)
+            t.queued = False
+            self.link.add(t, now)
+
+    def _preempt_for_demand(self, now: float) -> None:
+        """A dispatched invocation's transfer is blocked on the staging
+        pool: bump paused prefetches off their staging buffers (worst
+        dispatch priority first) until the demand head fits. A bumped
+        prefetch keeps the bytes already moved and re-queues behind the
+        demand class; the staging pool itself stays a hard bound."""
+        w = self.waiting
+        while w and w[0].kind == "demand":
+            head = w[0]
+            if self.staging.reserve(head.nbytes):
+                w.pop(0)
+                head.queued = False
+                self.link.add(head, now)
+                self._sync_etas()
+                continue
+            paused = [t for t in self.link.active if t.kind != "demand"]
+            if not paused:
+                break       # nothing left to bump; wait for completions
+            v = max(paused, key=lambda t: t.prio)
+            self.link.remove(v, now)
+            self.staging.release(v.nbytes)
+            self.mem.set_upload_eta(v.fn_id, INF)
+            v.queued = True
+            i = len(w)
+            while i > 0 and w[i - 1].kind != "demand" \
+                    and w[i - 1].prio > v.prio:
+                i -= 1
+            w.insert(i, v)
+
+    def _sync_etas(self) -> None:
+        """Mirror the link's re-planned etas into the memory manager so
+        ``is_resident`` never claims a mid-flight region usable."""
+        set_eta = self.mem.set_upload_eta
+        for t in self.link.active:
+            set_eta(t.fn_id, t.eta)

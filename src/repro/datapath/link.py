@@ -1,0 +1,158 @@
+"""Contended per-device H2D link: processor sharing with demand priority.
+
+Transfers in flight share the link's bandwidth; completion times are
+re-planned on every entry/exit/upgrade, in the same event-driven style
+as the executors (``_progress`` integrates work done since the last
+mutation, ``_replan`` projects new completion etas).
+
+Two transfer classes (FaaSTube's bandwidth allocation, collapsed to a
+strict two-level hierarchy):
+
+    demand    — a dispatched invocation is waiting on these bytes;
+                demand transfers split the link equally among themselves
+    prefetch  — anticipatory background uploads; they run only while NO
+                demand transfer is active, and are paused (eta = inf)
+                otherwise
+
+so a background prefetch can never slow a dispatch's critical-path
+transfer below its no-prefetch bandwidth.
+
+Within the prefetch class the link serves ONE transfer at a time, in
+ascending ``prio`` order (a DMA copy engine streams background copies
+back-to-back; splitting it N ways would finish nothing before the
+scheduler needs it). The control plane supplies ``prio`` from the
+policy's stable dispatch tie-break (queue creation order), so prefetches
+complete in the order flows are expected to dispatch and the pipeline
+stays ahead of the drain instead of thrashing.
+"""
+from __future__ import annotations
+
+from typing import List, Optional
+
+INF = float("inf")
+
+# completion slack: float integration of piecewise-constant shares loses
+# ~ulp(nbytes) per replan; half a byte absorbs that without ever letting
+# a materially-incomplete transfer slip through
+_EPS_BYTES = 0.5
+
+
+class Transfer:
+    __slots__ = ("fn_id", "nbytes", "remaining", "eta", "kind", "prio",
+                 "waiters", "queued")
+
+    def __init__(self, fn_id: str, nbytes: int, kind: str,
+                 prio: float = 0.0):
+        self.fn_id = fn_id
+        self.nbytes = int(nbytes)
+        self.remaining = float(nbytes)
+        self.eta = INF           # planned completion; inf while paused/queued
+        self.kind = kind         # "demand" | "prefetch"
+        self.prio = prio         # prefetch service order (lower = sooner)
+        self.waiters: List = []  # callables(t_done): dispatched invocations
+        self.queued = False      # blocked on the staging pool, not on link
+
+
+class SharedLink:
+    """One device's H2D/PCIe link."""
+
+    __slots__ = ("bw", "active", "_last")
+
+    def __init__(self, bw: float):
+        self.bw = float(bw)
+        self.active: List[Transfer] = []
+        self._last = 0.0         # virtual time of the last integration
+
+    # -- processor sharing -------------------------------------------------
+    def _serving_prefetch(self) -> Optional[Transfer]:
+        """The one prefetch the link streams while no demand is active:
+        lowest prio, insertion order breaking ties."""
+        best = None
+        for t in self.active:
+            if best is None or t.prio < best.prio:
+                best = t
+        return best
+
+    def _progress(self, now: float) -> None:
+        """Integrate bytes moved since the last mutation under the
+        share split that held over [._last, now)."""
+        dt = now - self._last
+        if dt <= 0.0:
+            return
+        act = self.active
+        if act:
+            n_demand = 0
+            for t in act:
+                if t.kind == "demand":
+                    n_demand += 1
+            if n_demand:
+                moved = self.bw * dt / n_demand
+                for t in act:
+                    if t.kind == "demand":
+                        t.remaining -= moved
+            else:
+                serving = self._serving_prefetch()
+                if serving is not None:
+                    serving.remaining -= self.bw * dt
+        self._last = now
+
+    def _replan(self) -> None:
+        """Project completion etas under the current share split."""
+        act = self.active
+        if not act:
+            return
+        n_demand = 0
+        for t in act:
+            if t.kind == "demand":
+                n_demand += 1
+        if n_demand:
+            per = self.bw / n_demand
+            for t in act:
+                if t.kind == "demand":
+                    rem = t.remaining
+                    t.eta = self._last + (rem if rem > 0.0 else 0.0) / per
+                else:
+                    t.eta = INF          # paused behind demand traffic
+        else:
+            serving = self._serving_prefetch()
+            for t in act:
+                if t is serving:
+                    rem = t.remaining
+                    t.eta = self._last + (rem if rem > 0.0 else 0.0) / self.bw
+                else:
+                    t.eta = INF          # behind the serving prefetch
+
+    # -- mutations ---------------------------------------------------------
+    def add(self, t: Transfer, now: float) -> None:
+        self._progress(now)
+        self.active.append(t)
+        self._replan()
+
+    def remove(self, t: Transfer, now: float) -> None:
+        self._progress(now)
+        self.active.remove(t)
+        self._replan()
+
+    def mark_demand(self, t: Transfer, now: float) -> None:
+        self._progress(now)
+        t.kind = "demand"
+        self._replan()
+
+    def pop_completed(self, now: float) -> List[Transfer]:
+        """Advance to ``now`` and detach every finished transfer."""
+        self._progress(now)
+        act = self.active
+        done = [t for t in act if t.remaining <= _EPS_BYTES]
+        if done:
+            self.active = [t for t in act if t.remaining > _EPS_BYTES]
+            self._replan()
+        return done
+
+    def next_eta(self) -> Optional[float]:
+        """Earliest planned completion (None when idle or all paused)."""
+        best = None
+        for t in self.active:
+            e = t.eta
+            if e < INF and (best is None or e < best):
+                best = e
+        return best

@@ -76,6 +76,15 @@ class DeviceMemoryManager:
         self._paged = policy in ("ondemand", "madvise")
         self._madvise = policy == "madvise"
         self._prefetch_only = policy == "prefetch"
+        # cold-start data plane (repro.datapath): when set, upload etas
+        # come from the device's contended-link planner instead of the
+        # point estimate size / h2d_bw. Signature: (fn_id, size, now,
+        # kind) -> planned completion eta ("prefetch" | "demand").
+        self.uploader = None
+        # False suppresses the activation-time anticipatory upload (the
+        # pipeline datapath's keep-alive-only baseline); acquire-time
+        # demand uploads are unaffected
+        self.anticipatory_upload = True
         self.regions: Dict[str, Region] = {}
         # notified with fn_id whenever a region is swapped out; the
         # wall-clock executor mirrors these onto real endpoints
@@ -152,11 +161,15 @@ class DeviceMemoryManager:
         self._notify_evict(r.fn_id)
 
     def _evict_lru(self, need: int, now: float,
-                   protect: Tuple[str, ...] = ()) -> bool:
+                   protect: Tuple[str, ...] = (),
+                   evictable_only: bool = False) -> bool:
         """Free >= need bytes by swapping out evictable (then any)
         resident regions in LRU order. Swap-out is async (off the critical
         path), so capacity is released immediately. O(log R) per evicted
-        region on the common (evictable-satisfies) path."""
+        region on the common (evictable-satisfies) path.
+        ``evictable_only`` skips the resident fallback — background
+        prefetches (``begin_prefetch``) may only reclaim what the state
+        machine already marked reclaimable."""
         if self.free_bytes() >= need:
             return True
         victims: List[Region] = []
@@ -179,6 +192,8 @@ class DeviceMemoryManager:
             heapq.heappush(h, e)
         if self.free_bytes() >= need:
             return True
+        if evictable_only:
+            return False
         if self.strict_reclaim:
             return self._evict_resident_sweep(need, victims, protect)
         return self._evict_resident_clean(need, protect)
@@ -263,6 +278,15 @@ class DeviceMemoryManager:
         for cb in self.evict_listeners:
             cb(fn_id)
 
+    def _upload_eta(self, fn_id: str, size: int, now: float,
+                    kind: str) -> float:
+        """Planned completion of an upload starting now: the contended
+        link's plan when a datapath is wired, else the scalar point
+        estimate (the seed's model)."""
+        if self.uploader is not None:
+            return self.uploader(fn_id, size, now, kind)
+        return now + size / self.h2d_bw
+
     # -- scheduler hooks ------------------------------------------------------
     def on_queue_active(self, fn_id: str, size: int, now: float) -> None:
         """Anticipatory prefetch when a queue becomes active (§4.3)."""
@@ -270,14 +294,60 @@ class DeviceMemoryManager:
         r.evictable = False
         if self.policy not in ("prefetch", "prefetch_swap"):
             return
+        if not self.anticipatory_upload:
+            return      # keep-alive-only baseline: upload at dispatch
         if r.resident or r.upload_eta > now:
             return
         if not self._evict_lru(r.size, now, protect=(fn_id,)):
             return  # no space: upload will happen at dispatch
-        r.upload_eta = now + r.size / self.h2d_bw
+        r.upload_eta = self._upload_eta(fn_id, r.size, now, "prefetch")
         self._set_resident(r, True)   # reserved now, usable at upload_eta
         self.prefetch_count += 1
         self.bytes_uploaded += r.size
+
+    def begin_prefetch(self, fn_id: str, size: int, now: float) -> bool:
+        """Drain-pass anticipatory prefetch (pipeline datapath): start
+        uploading a queued-but-not-dispatchable flow's weights. Unlike
+        activation prefetch the region stays *evictable* — it is charged
+        capacity through the normal accounting but never protects itself
+        against a dispatching flow's reclaim — and only the already-
+        evictable pool may be displaced to make room."""
+        if self.policy not in ("prefetch", "prefetch_swap"):
+            return False
+        r = self.region(fn_id, size)
+        if r.resident:
+            return False
+        if not self._evict_lru(r.size, now, protect=(fn_id,),
+                               evictable_only=True):
+            return False
+        r.upload_eta = self._upload_eta(fn_id, r.size, now, "prefetch")
+        r.evictable = True
+        self._set_resident(r, True)
+        self.prefetch_count += 1
+        self.bytes_uploaded += r.size
+        return True
+
+    # -- datapath callbacks ---------------------------------------------------
+    def set_upload_eta(self, fn_id: str, eta: float) -> None:
+        """Link replan: mirror a transfer's new planned completion (inf
+        while paused/queued) so ``is_resident`` stays truthful."""
+        r = self.regions.get(fn_id)
+        if r is not None and r.resident:
+            r.upload_eta = eta
+
+    def finish_upload(self, fn_id: str, now: float) -> None:
+        """A transfer's bytes landed: the region is usable from now."""
+        r = self.regions.get(fn_id)
+        if r is not None and r.resident:
+            r.upload_eta = now
+
+    def drop_region(self, fn_id: str) -> None:
+        """Release a resident region through the eviction path (bytes
+        counted, listeners notified once): used when a prefetch is
+        cancelled on an Inactive transition."""
+        r = self.regions.get(fn_id)
+        if r is not None and r.resident:
+            self._evict_one(r)
 
     def on_queue_idle(self, fn_id: str, now: float) -> None:
         """Throttled/Inactive: mark for (async) LRU eviction."""
@@ -345,7 +415,7 @@ class DeviceMemoryManager:
             # execution (UVM-style page-out on demand) -> exec stretch
             mult = THRASH_PENALTY
         self._set_resident(r, True)
-        r.upload_eta = now + r.size / self.h2d_bw
+        r.upload_eta = self._upload_eta(fn_id, r.size, now, "demand")
         self.bytes_uploaded += r.size
         return r.upload_eta, mult
 

@@ -193,3 +193,38 @@ class WarmPool:
     def cold_hit_pct(self) -> float:
         total = self.cold_starts + self.warm_starts + self.host_warm_starts
         return 100.0 * self.cold_starts / total if total else 0.0
+
+
+class StagingPool:
+    """Bounded pinned-host staging for H2D transfers (repro.datapath).
+
+    DMA engines read from pinned (page-locked) host memory; a transfer
+    holds a staging reservation for its full in-flight span and releases
+    it at completion or cancellation. The bound backpressures the data
+    plane: transfers that do not fit wait (FIFO within their priority
+    class, see ``DeviceDataPath``) instead of oversubscribing host
+    memory.
+
+    A transfer larger than the whole pool is admitted when the pool is
+    empty — it streams through the staging buffers in chunks — so one
+    oversized model cannot deadlock the link."""
+
+    __slots__ = ("capacity", "used", "peak", "rejections")
+
+    def __init__(self, capacity_bytes: int):
+        self.capacity = int(capacity_bytes)
+        self.used = 0
+        self.peak = 0           # high-water mark
+        self.rejections = 0     # reserve() calls that had to wait
+
+    def reserve(self, nbytes: int) -> bool:
+        if self.used + nbytes > self.capacity and self.used > 0:
+            self.rejections += 1
+            return False
+        self.used += nbytes
+        if self.used > self.peak:
+            self.peak = self.used
+        return True
+
+    def release(self, nbytes: int) -> None:
+        self.used -= nbytes

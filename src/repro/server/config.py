@@ -73,11 +73,38 @@ class ServerConfig:
     # executor, wall seconds under the wallclock executor; inter-shard
     # VT drift is bounded by one epoch's floor advance
     vt_epoch: float = 0.25
-    # second-pass resident reclaim semantics: True replays the seed's
-    # pre-snapshot sweep bug-for-bug (phase-1 victims re-counted, see
-    # memory/manager.py); False retires the quirk — each victim evicted
-    # and accounted exactly once (indexed device layer only)
-    strict_reclaim: bool = True
+    # second-pass resident reclaim semantics: False (default) retires
+    # the seed's double-counting quirk — each victim is evicted and
+    # accounted exactly once (indexed device layer only). True replays
+    # the seed's pre-snapshot sweep bug-for-bug (phase-1 victims
+    # re-counted, see memory/manager.py) and is what the reference
+    # device layer always does — it IS the seed — so the flag only
+    # affects device_layer="indexed"
+    strict_reclaim: bool = False
+    # cold-start data plane (repro.datapath):
+    #   "scalar"   — the seed's one-term cold model: cold_init is a
+    #                single overhead scalar and uploads complete at the
+    #                point estimate size / h2d_bw; kept verbatim as the
+    #                differential reference (bit-identical to the
+    #                pre-datapath plane)
+    #   "pipeline" — staged cold starts (container/sandbox setup + XLA
+    #                compile overlapping the host->HBM weight transfer),
+    #                per-device PCIe/H2D links as contended resources
+    #                (transfers share bandwidth, demand transfers
+    #                preempt background prefetches, completions
+    #                re-planned on entry/exit as first-class TRANSFER
+    #                events) and a bounded pinned-host staging pool.
+    #                Sim executor + fast event loop + indexed layer only.
+    datapath: str = "scalar"
+    # anticipatory weight prefetch (pipeline only): when a flow is
+    # queued but not yet dispatchable and the state machine predicts
+    # service, start its H2D transfer in the background through the
+    # admit/acquire accounting (prefetched regions stay evictable and
+    # never violate admission). False = keep-alive-only baseline: all
+    # transfers happen on the dispatch critical path
+    prefetch: bool = False
+    prefetch_depth: int = 4          # max background prefetches/device
+    staging_bytes: int = 64 * GB     # pinned-host staging pool/device
     # executor: "sim" (virtual clock) or "wallclock" (threads + JAX)
     executor: str = "sim"
     # metrics: "full" records every invocation + utilization sample;
@@ -132,6 +159,25 @@ def make_server(config: ServerConfig, *,
     if config.sharding not in ("none", "hash", "sticky"):
         raise ValueError(f"unknown sharding {config.sharding!r}; "
                          f"expected 'none', 'hash' or 'sticky'")
+    if config.datapath not in ("scalar", "pipeline"):
+        raise ValueError(f"unknown datapath {config.datapath!r}; "
+                         f"expected 'scalar' or 'pipeline'")
+    if config.datapath == "pipeline":
+        if config.executor != "sim":
+            raise ValueError(
+                "datapath='pipeline' is sim-only: the wallclock executor "
+                "moves real bytes, so modeled link contention does not "
+                "apply there")
+        if config.sampling != "transition" or not config.batch_dispatch:
+            raise ValueError(
+                "datapath='pipeline' requires the fast event loop "
+                "(sampling='transition', batch_dispatch=True): the "
+                "per_event/per-token loops are pre-datapath differential "
+                "references and carry no TRANSFER events")
+    if config.prefetch and config.datapath != "pipeline":
+        raise ValueError(
+            "prefetch=True requires datapath='pipeline': the scalar "
+            "plane has no background transfer machinery to prefetch on")
     sharded = config.sharding != "none"
     if not sharded and config.n_shards != 1:
         raise ValueError("n_shards > 1 requires sharding='hash' or "

@@ -65,6 +65,9 @@ class DeviceState:
     # dict per dispatch), kept incrementally for O(1) admit
     running_bytes: int = 0
     running_fn_count: Dict[str, int] = field(default_factory=dict)
+    # cold-start data plane (repro.datapath.DeviceDataPath); None under
+    # datapath="scalar"
+    datapath: object = None
     # demand-sum cache: recomputed (with the exact dict-sum arithmetic,
     # so results stay bit-identical to a fresh scan) only after a
     # dispatch/completion changed ``demands`` — utilization() and the
@@ -133,16 +136,13 @@ class ControlPlane:
         layer = getattr(config, "device_layer", "indexed")
         mem_cls, pool_cls = make_device_layer(layer)
         # second-pass reclaim semantics (ServerConfig.strict_reclaim):
-        # the reference layer IS the seed's strict behavior, so the
-        # retired-quirk mode only exists on the indexed manager
+        # the reference layer IS the seed's strict behavior — its
+        # constructor takes no flag and the config one is ignored there;
+        # the retired-quirk mode only exists on the indexed manager
         mem_kw = {}
-        if not getattr(config, "strict_reclaim", True):
-            if layer == "reference":
-                raise ValueError(
-                    "strict_reclaim=False requires device_layer='indexed'"
-                    ": the reference layer is the seed's strict "
-                    "second-pass sweep by definition")
-            mem_kw["strict_reclaim"] = False
+        if layer != "reference":
+            mem_kw["strict_reclaim"] = bool(
+                getattr(config, "strict_reclaim", True))
         self.pool = pool_cls(config.pool_size)
         # dev_base: first global device id of this plane's group (shards
         # of a ShardedControlPlane own disjoint id ranges; 0 unsharded)
@@ -156,6 +156,31 @@ class ControlPlane:
                                               dynamic=config.dynamic_d),
                         slot=i)
             for i in range(config.n_devices)]
+        # cold-start data plane (repro.datapath): one contended link +
+        # staging pool per device, wired into the memory manager's
+        # upload/evict paths. "scalar" leaves every seed code path
+        # untouched (uploader stays None -> point-estimate etas).
+        self.datapath_mode = getattr(config, "datapath", "scalar")
+        self._pipeline = self.datapath_mode == "pipeline"
+        self._prefetch_on = False
+        self._prefetch_depth = getattr(config, "prefetch_depth", 4)
+        if self._pipeline:
+            if layer != "indexed":
+                raise ValueError(
+                    "datapath='pipeline' requires device_layer='indexed'"
+                    ": the reference manager has no datapath hooks")
+            from repro.datapath.device import DeviceDataPath
+            self._prefetch_on = bool(getattr(config, "prefetch", False))
+            staging = getattr(config, "staging_bytes", 64 * (1 << 30))
+            for dev in self.devices:
+                dp = DeviceDataPath(dev.dev_id, config.h2d_bw, staging,
+                                    dev.mem)
+                dev.datapath = dp
+                dev.mem.uploader = self._make_uploader(dp)
+                # keep-alive-only baseline: no activation-time uploads,
+                # every transfer starts at dispatch on the critical path
+                dev.mem.anticipatory_upload = self._prefetch_on
+                dev.mem.evict_listeners.append(dp.on_region_evicted)
         T = getattr(policy, "T", 0.0)
         lean = getattr(config, "metrics", "full") == "lean"
         self.fairness = FairnessTracker(window=config.fairness_window, T=T,
@@ -232,6 +257,12 @@ class ControlPlane:
             dev.mem.on_queue_active(q.fn_id, spec.mem_bytes, now)
         else:
             dev.mem.on_queue_idle(q.fn_id, now)
+            if self._pipeline and new is QueueState.INACTIVE:
+                # the anticipation was wrong: abort the flow's in-flight
+                # background prefetch and release its region (demand
+                # transfers / dispatched regions refuse the cancel)
+                if dev.datapath.cancel(q.fn_id, now):
+                    dev.mem.drop_region(q.fn_id)
         if self._state_subs or self._emit_all:
             self.bus.emit_state_change(
                 StateChangeEvent(q.fn_id, old, new, now))
@@ -431,6 +462,82 @@ class ControlPlane:
         if self._complete_subs or self._emit_all:
             self.bus.emit_complete(
                 CompleteEvent(inv, fn_id, inv.device_id, now))
+
+    # -- cold-start data plane (datapath="pipeline") ------------------------------
+    def datapath_tick(self, now: float) -> None:
+        """Refresh every device link's clock at the top of an event, so
+        mid-event mutations without a timestamp (evict-listener
+        cancellations) integrate link progress at the right instant."""
+        for dev in self.devices:
+            dev.datapath.now = now
+
+    def _make_uploader(self, dp):
+        """Memory-manager upload hook bound to one device's data path,
+        tagging each transfer with the flow's dispatch priority. The
+        link serves background prefetches one at a time in this order,
+        so uploads complete in the order the policy will drain the
+        flows; queue creation order (``q.ins``) is the policy's stable
+        candidate tie-break and survives across Inactive/Active cycles."""
+        queues = self.policy.queues
+
+        def upload(fn_id, nbytes, now, kind):
+            q = queues.get(fn_id)
+            return dp.request(fn_id, nbytes, now, kind,
+                              prio=q.ins if q is not None else 0)
+        return upload
+
+    def prefetch_pass(self, now: float) -> None:
+        """Anticipatory weight prefetch (the drain-side trigger): for
+        every flow with queued work that did not dispatch this pass —
+        throttled, out of D tokens, or blocked on admission — start
+        uploading its weights in the background, overlapping the
+        transfer with the running invocations. Prefetch goes through
+        ``begin_prefetch`` (normal admit/charge accounting, region stays
+        evictable), targets only the flow's sticky device (no placement
+        guessing), and is bounded per device by ``prefetch_depth``."""
+        if not self._prefetch_on:
+            return
+        fns = self.fns
+        queues = self.policy.queues
+        sticky = self._sticky_dev
+        devices = self.devices
+        depth = self._prefetch_depth
+        inactive = QueueState.INACTIVE
+        for fn_id in self._backlogged:
+            slot = sticky.get(fn_id)
+            if slot is None:
+                continue        # no placement history yet
+            q = queues.get(fn_id)
+            if q is None or not q.pending or q.state is inactive:
+                continue
+            dev = devices[slot]
+            dp = dev.datapath
+            if dp.n_prefetch >= depth or fn_id in dp.transfers:
+                continue
+            mem = dev.mem
+            r = mem.regions.get(fn_id)
+            if r is not None and r.resident:
+                continue        # resident, or an upload already in flight
+            spec = fns[fn_id]
+            if not mem.admit(fn_id, spec.mem_bytes, dev.running_bytes, now):
+                continue        # never violate admission for a prefetch
+            mem.begin_prefetch(fn_id, spec.mem_bytes, now)
+
+    def next_transfer_eta(self) -> Optional[float]:
+        """Earliest planned transfer completion across devices (the sim
+        executor's TRANSFER-event arming signal)."""
+        best: Optional[float] = None
+        for dev in self.devices:
+            e = dev.datapath.next_eta()
+            if e is not None and (best is None or e < best):
+                best = e
+        return best
+
+    def advance_transfers(self, now: float) -> None:
+        """A TRANSFER event fired: realize completed transfers (staging
+        release, region finalization, dispatch-waiter callbacks)."""
+        for dev in self.devices:
+            dev.datapath.advance(now)
 
     # -- per-event sampling -------------------------------------------------------
     # Executors call ``sample`` (bound in __init__ to one of the two

@@ -54,7 +54,7 @@ class SimExecutor:
     precede completions precede timers — the same tie-break the seed's
     materialize-all-arrivals-first heap produced."""
 
-    ARRIVAL, COMPLETE, TIMER = 0, 1, 2
+    ARRIVAL, COMPLETE, TIMER, TRANSFER = 0, 1, 2, 3
 
     def __init__(self, control: ControlPlane, config):
         self.control = control
@@ -67,6 +67,17 @@ class SimExecutor:
         self.batch = getattr(config, "batch_dispatch", True)
         self._transition = \
             getattr(config, "sampling", "transition") != "per_event"
+        # cold-start data plane (datapath="pipeline"): transfer
+        # completions become first-class TRANSFER events and dispatches
+        # whose weights are mid-flight wait on the link's re-planned
+        # completion instead of the acquire-time estimate
+        self._pipeline = getattr(config, "datapath", "scalar") == "pipeline"
+        self._xfer_armed: Optional[float] = None   # earliest armed TRANSFER
+        if self._pipeline:
+            self._stage_fixed: Dict[str, float] = {}  # fn -> setup+compile
+            # instance attr shadows the method: the fast loop binds
+            # ``self._realize`` once, so scalar mode pays no branch
+            self._realize = self._realize_pipeline
         self._heap: List = []
         self._seq = itertools.count()
         self._n_arrived = 0
@@ -106,6 +117,11 @@ class SimExecutor:
 
     def run(self, trace) -> RunResult:
         cp = self.control
+        if self._pipeline and not (self.batch and self._transition):
+            raise ValueError(
+                "datapath='pipeline' requires the fast event loop "
+                "(batch_dispatch=True, sampling='transition'): the "
+                "reference loops carry no TRANSFER events")
         it = iter(trace)
         self._pull_arrival(it)
         now = 0.0
@@ -140,10 +156,14 @@ class SimExecutor:
         armed = self._armed
         record = self.stats.record if self.lean else None
         ARRIVAL, COMPLETE, TIMER = self.ARRIVAL, self.COMPLETE, self.TIMER
+        TRANSFER = self.TRANSFER
+        pipeline = self._pipeline
         events = 0
         while heap:
             now, kind, _, payload = pop(heap)
             events += 1
+            if pipeline:
+                cp.datapath_tick(now)
             if kind == ARRIVAL:
                 on_arrival(payload, now)
                 pull(it)
@@ -151,13 +171,27 @@ class SimExecutor:
                 on_complete(payload, now)
                 if record is not None:
                     record(payload)
-            else:                       # TIMER: queue-state housekeeping
+            elif kind == TIMER:         # queue-state housekeeping
                 armed.pop()             # fired timers pop in LIFO order
+            else:                       # TRANSFER: link completions
+                self._xfer_armed = None
+                cp.advance_transfers(now)
             while True:
                 d = dispatch_once(now)
                 if d is None:
                     break
                 realize(d, now)
+            if pipeline:
+                # anticipatory prefetch for flows the drain left queued,
+                # then (re-)arm the earliest transfer completion. Spurious
+                # wakes after a replan are harmless: advance is idempotent
+                # and the handler re-arms from the live link state.
+                cp.prefetch_pass(now)
+                eta = cp.next_transfer_eta()
+                if eta is not None and (self._xfer_armed is None
+                                        or eta < self._xfer_armed):
+                    self._xfer_armed = eta
+                    push(heap, (eta, TRANSFER, next(seq), None))
             sample(now)
             due = next_expiry(now, armed[-1] if armed else None)
             if due is not None and (not armed or due < armed[-1]):
@@ -242,6 +276,60 @@ class SimExecutor:
         heapq.heappush(self._heap,
                        (completion, self.COMPLETE, next(self._seq), inv))
 
+    def _realize_pipeline(self, d: DispatchDecision, now: float) -> None:
+        """Pipeline-datapath realize (``datapath="pipeline"``): cold
+        fixed stages (container setup + XLA compile) overlap the weight
+        transfer — Zhao et al.'s fast-setup pipeline — so a cold start
+        costs max(setup + compile, transfer wait), not their sum. A
+        dispatch whose weights are mid-flight upgrades the transfer to
+        the demand class and waits on the link's *actual* completion
+        callback (re-planned under contention), not the acquire-time
+        estimate."""
+        from repro.datapath.stages import stages_for
+        inv, spec, dev = d.inv, d.spec, d.device
+        demand_sum = dev.demand_total()     # includes this invocation
+        stretch = 1.0 + self.config.beta * max(0.0, demand_sum - 1.0)
+        service = spec.warm_time * d.mem_mult * stretch
+        fixed = 0.0
+        if d.start_type == "cold":
+            fixed = self._stage_fixed.get(inv.fn_id)
+            if fixed is None:
+                fixed = stages_for(spec, self.config.h2d_bw).fixed_s
+                self._stage_fixed[inv.fn_id] = fixed
+        dp = dev.datapath
+        t = dp.transfers.get(inv.fn_id)
+        if t is not None:
+            # weights still in flight: prioritize the transfer and
+            # finish realization when the bytes actually land
+            dp.mark_demand(inv.fn_id, now)
+            floor = now + fixed
+
+            def finish(t_done, inv=inv, now=now, floor=floor,
+                       service=service, dev=dev):
+                self._finish_realize(
+                    inv, now, t_done if t_done > floor else floor,
+                    service, dev)
+
+            t.waiters.append(finish)
+            return
+        ready = d.ready
+        start = ready if ready > now else now
+        floor = now + fixed
+        if floor > start:
+            start = floor
+        self._finish_realize(inv, now, start, service, dev)
+
+    def _finish_realize(self, inv: Invocation, now: float, start: float,
+                        service: float, dev) -> None:
+        inv.overhead = start - now
+        inv.exec_start = start
+        inv.service_time = service
+        inv.completion = start + service
+        dev.busy_time += service
+        heapq.heappush(self._heap,
+                       (inv.completion, self.COMPLETE, next(self._seq),
+                        inv))
+
     def run_profiled(self, trace) -> RunResult:
         """``run`` with a per-event cost breakdown (benchmarks.scale
         --event-profile): wall time per loop segment accumulates into
@@ -261,6 +349,11 @@ class SimExecutor:
         Instrumented and therefore slower than ``run``; results are
         bit-identical (the clock reads do not feed the model)."""
         cp = self.control
+        if self._pipeline:
+            raise ValueError(
+                "run_profiled does not support datapath='pipeline' "
+                "(its loop carries no TRANSFER events); profile the "
+                "scalar datapath instead")
         clock = time.perf_counter_ns
         ns = self.event_ns = {k: 0 for k in (
             "heap", "arrival", "complete", "dispatch", "sample", "timer",

@@ -390,6 +390,31 @@ class ShardedControlPlane:
     def on_complete(self, inv: Invocation, now: float) -> None:
         self.shards[inv.device_id // self._group].on_complete(inv, now)
 
+    # -- cold-start data plane (datapath="pipeline") -----------------------------
+    # Shards inherit the datapath config through the replace() above;
+    # each owns its devices' links/staging, so delegation is a flat
+    # fan-out with a bounded-min merge for the TRANSFER arming signal
+    # (the _ShardedPolicyView.next_expiry pattern).
+    def datapath_tick(self, now: float) -> None:
+        for s in self.shards:
+            s.datapath_tick(now)
+
+    def prefetch_pass(self, now: float) -> None:
+        for s in self.shards:
+            s.prefetch_pass(now)
+
+    def next_transfer_eta(self) -> Optional[float]:
+        best: Optional[float] = None
+        for s in self.shards:
+            e = s.next_transfer_eta()
+            if e is not None and (best is None or e < best):
+                best = e
+        return best
+
+    def advance_transfers(self, now: float) -> None:
+        for s in self.shards:
+            s.advance_transfers(now)
+
     def sample(self, now: float) -> None:
         shards = self.shards
         for s in shards:

@@ -14,6 +14,7 @@ from typing import Dict, List, Optional
 from repro.analysis.flops import (HBM_BW, ICI_BW, PEAK_FLOPS, CostTerms,
                                   roofline_terms, step_cost)
 from repro.configs import ARCH_IDS, get_config
+from repro.datapath.stages import ColdStartStages
 from repro.shapes import INPUT_SHAPES, InputShape, get_shape
 from repro.workloads.spec import FunctionSpec
 
@@ -33,34 +34,47 @@ def service_time(cfg, shape: InputShape, chips: int = DEFAULT_CHIPS,
 
 
 def endpoint_spec(arch_id: str, shape_name: str,
-                  chips: int = DEFAULT_CHIPS) -> FunctionSpec:
+                  chips: int = DEFAULT_CHIPS, *,
+                  compile_time: float = COMPILE_TIME,
+                  h2d_bw: float = H2D_BW,
+                  setup_time: float = 0.0) -> FunctionSpec:
+    """``compile_time`` / ``h2d_bw`` / ``setup_time`` parameterize the
+    cold-start stages (defaults preserve the historical module
+    constants), so the cost model and the serving datapath agree on
+    bandwidth by construction instead of by two hard-coded numbers. The
+    emitted spec carries the explicit ``ColdStartStages``; its scalar
+    ``cold_init`` is the uncontended sum of the same stages."""
     cfg = get_config(arch_id)
     shape = get_shape(shape_name)
     svc = service_time(cfg, shape, chips)
     wbytes = cfg.n_params() * (2 if "16" in cfg.param_dtype else 4)
-    upload = wbytes / H2D_BW
+    stages = ColdStartStages(setup_s=setup_time, compile_s=compile_time,
+                             weight_bytes=int(wbytes))
     # demand: fraction of the slice's compute this step occupies
     cost = step_cost(cfg, shape)
     demand = min(1.0, cost.flops / (svc * chips * PEAK_FLOPS) + 0.05)
     return FunctionSpec(
         fn_id=f"{arch_id}:{shape_name}",
         warm_time=svc,
-        cold_init=COMPILE_TIME + upload,
+        cold_init=stages.scalar_cold_init(h2d_bw),
         mem_bytes=int(wbytes),
         demand=demand,
         kind="endpoint",
+        stages=stages,
     )
 
 
 def endpoint_mix(shape_name: str = "decode_32k",
-                 archs: Optional[List[str]] = None
-                 ) -> Dict[str, FunctionSpec]:
+                 archs: Optional[List[str]] = None,
+                 **cost_kw) -> Dict[str, FunctionSpec]:
+    """``cost_kw`` (compile_time / h2d_bw / setup_time) is forwarded to
+    ``endpoint_spec`` for every architecture in the mix."""
     archs = archs or ARCH_IDS
     out = {}
     for a in archs:
         cfg = get_config(a)
         if shape_name == "long_500k" and not cfg.supports_long_context:
             continue
-        s = endpoint_spec(a, shape_name)
+        s = endpoint_spec(a, shape_name, **cost_kw)
         out[s.fn_id] = s
     return out

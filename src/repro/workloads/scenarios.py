@@ -40,7 +40,9 @@ import math
 from dataclasses import dataclass, field
 from typing import Callable, Dict, Iterator, Optional
 
-from repro.workloads.spec import DEFAULT_MIX, FunctionSpec, function_copies
+from repro.datapath.stages import ColdStartStages
+from repro.workloads.spec import (DEFAULT_MIX, GB, FunctionSpec,
+                                  function_copies)
 from repro.workloads.traces import (TraceEvent, azure_params, fn_rng,
                                     iat_stream, merge_streams,
                                     thinned_poisson_stream, zipf_rates)
@@ -181,16 +183,63 @@ def tenant_hog(n_fns: int = 24, duration: float = 600.0,
                     make_stream, max_events)
 
 
+def _llm_endpoint_fns(n_fns: int, h2d_bw: float) -> Dict[str, FunctionSpec]:
+    """Transfer-dominated endpoint mix (the FaaSTube regime): multi-GB
+    weights behind short fixed setup/compile stages, seconds-scale
+    service — cold starts are dominated by the host->HBM upload, which
+    is exactly what the pipeline datapath can overlap and prefetch.
+    Deterministic: spec k cycles a fixed size/service table."""
+    sizes_gb = (4, 6, 8, 10, 14)
+    warm_s = (0.8, 1.3, 1.8, 2.4, 3.0)
+    demand = (0.45, 0.5, 0.55, 0.6, 0.5)
+    out: Dict[str, FunctionSpec] = {}
+    for i in range(n_fns):
+        k = i % len(sizes_gb)
+        mem = sizes_gb[k] * GB
+        st = ColdStartStages(setup_s=0.3, compile_s=1.2, weight_bytes=mem)
+        fid = f"llm-{i}"
+        out[fid] = FunctionSpec(fid, warm_time=warm_s[k],
+                                cold_init=st.scalar_cold_init(h2d_bw),
+                                mem_bytes=mem, demand=demand[k],
+                                kind="endpoint", stages=st)
+    return out
+
+
+def _scale_mem(fns: Dict[str, FunctionSpec],
+               mem_scale: float) -> Dict[str, FunctionSpec]:
+    """Scale the resident working set only (``cold_init`` untouched):
+    a pressure knob for memory/datapath experiments."""
+    if mem_scale == 1.0:
+        return fns
+    from dataclasses import replace
+    return {f: replace(s, mem_bytes=int(s.mem_bytes * mem_scale))
+            for f, s in fns.items()}
+
+
 @scenario("cold-start-storm")
 def cold_start_storm(n_fns: int = 96, duration: float = 900.0,
                      wave_period: float = 120.0, wave_width: float = 5.0,
                      participation: float = 0.7, seed: int = 0,
+                     spec_profile: str = "paper", mem_scale: float = 1.0,
+                     llm_h2d_bw: float = 16 * GB,
                      max_events: Optional[int] = None) -> Scenario:
     """Sparse functions arriving in synchronized waves: between waves the
     anticipatory TTL (alpha * IAT ~ alpha * wave_period) and keep-alive
     policies decide who stays resident; each wave front-loads cold
-    starts and memory churn."""
-    fns = function_copies(DEFAULT_MIX, n_fns)
+    starts and memory churn.
+
+    ``spec_profile="paper"`` waves the Table-1 copies; ``"llm"`` waves
+    the transfer-dominated endpoint mix (``llm_h2d_bw`` must match the
+    server's ``h2d_bw`` for the scalar cold model to agree with the
+    pipeline stages). ``mem_scale`` multiplies working sets."""
+    if spec_profile == "llm":
+        fns = _llm_endpoint_fns(n_fns, llm_h2d_bw)
+    elif spec_profile == "paper":
+        fns = function_copies(DEFAULT_MIX, n_fns)
+    else:
+        raise ValueError(f"unknown spec_profile {spec_profile!r}; "
+                         f"expected 'paper' or 'llm'")
+    fns = _scale_mem(fns, mem_scale)
     # jitter must stay inside the wave spacing or per-function streams
     # would emit out of order (merge_streams requires sorted inputs)
     jitter = min(wave_width, wave_period)
@@ -219,14 +268,16 @@ def cold_start_storm(n_fns: int = 96, duration: float = 900.0,
 def azure_longtail(n_fns: int = 240, duration: float = float("inf"),
                    trace_id: int = 3, scale: float = 10.0, seed: int = 0,
                    total_rps: Optional[float] = None,
+                   mem_scale: float = 1.0,
                    max_events: Optional[int] = 100_000) -> Scenario:
     """The paper's heavy-tailed mix scaled up: 10x/100x the function
     count and aggregate rate of the Table-3 samples. Defaults stream
     forever (duration=inf) capped by ``max_events``. ``total_rps``
     renormalizes the aggregate expected arrival rate (keeping the
     heavy-tailed per-function mix) so long replays can be pinned at a
-    stable operating point instead of unbounded-backlog overload."""
-    fns = function_copies(DEFAULT_MIX, n_fns)
+    stable operating point instead of unbounded-backlog overload;
+    ``mem_scale`` multiplies working sets (datapath/memory pressure)."""
+    fns = _scale_mem(function_copies(DEFAULT_MIX, n_fns), mem_scale)
     params = azure_params(fns, trace_id=trace_id, scale=scale)
     if total_rps is not None:
         agg = sum(1.0 / m for m, _ in params.values())

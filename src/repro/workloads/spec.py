@@ -11,7 +11,9 @@ the roofline cost model in ``repro.workloads.costmodel``.
 from __future__ import annotations
 
 from dataclasses import dataclass, field, replace
-from typing import Dict, List
+from typing import Dict, List, Optional
+
+from repro.datapath.stages import ColdStartStages
 
 GB = 1024 ** 3
 
@@ -26,6 +28,10 @@ class FunctionSpec:
     cpu_warm: float = 0.0      # Table-1 CPU columns (benchmarks only)
     cpu_cold: float = 0.0
     kind: str = "generic"
+    # explicit cold-start stage decomposition (repro.datapath); None for
+    # legacy specs — the pipeline datapath then decomposes ``cold_init``
+    # via ``repro.datapath.stages.stages_for``
+    stages: Optional[ColdStartStages] = None
 
     def with_id(self, fn_id: str) -> "FunctionSpec":
         return replace(self, fn_id=fn_id)

@@ -162,8 +162,13 @@ TRACES = {
     "azure": azure_trace(FNS, duration=200.0, trace_id=3),
 }
 # ~2 regions fit per device: constant misses, evictions and admission
-# refusals — the regime where the device layer actually decides things
-PRESSURE = dict(d=2, n_devices=2, capacity_bytes=3 * GB, pool_size=8)
+# refusals — the regime where the device layer actually decides things.
+# strict_reclaim=True: these suites assert bit-identity against the
+# reference layer, which IS the seed (always strict); the indexed layer
+# defaults to the clean single-count reclaim since PR 6, so the
+# comparison must opt back into the seed's double-count semantics
+PRESSURE = dict(d=2, n_devices=2, capacity_bytes=3 * GB, pool_size=8,
+                strict_reclaim=True)
 
 
 def replay(trace_name, *, policy="mqfq-sticky", policy_kwargs=None,

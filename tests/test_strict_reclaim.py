@@ -5,14 +5,13 @@ When the evictable pool cannot satisfy a request, the seed's fallback
 re-walked its *pre-eviction* resident snapshot, re-processing the
 phase-1 victims: their eviction is a residency no-op but the byte
 accounting and evict-listener callbacks fire a second time.
-``strict_reclaim=True`` (the default) replays that bug-for-bug — pinned
-here and by tests/test_memory_equivalence.py against the reference
-layer. ``strict_reclaim=False`` retires the quirk on the indexed
-manager: the second pass sweeps only regions still resident, so every
-victim is evicted, counted and notified exactly once, while freeing the
-same memory."""
-import pytest
-
+``strict_reclaim=True`` replays that bug-for-bug — pinned here and by
+tests/test_memory_equivalence.py against the reference layer (which IS
+the seed and is always strict; the config flag only affects the indexed
+layer). ``strict_reclaim=False`` (the ``ServerConfig`` default since
+PR 6) retires the quirk on the indexed manager: the second pass sweeps
+only regions still resident, so every victim is evicted, counted and
+notified exactly once, while freeing the same memory."""
 from repro.memory.manager import GB, DeviceMemoryManager
 from repro.memory.reference import ReferenceDeviceMemoryManager
 from repro.server import ServerConfig, make_server
@@ -79,11 +78,30 @@ def test_strict_matches_reference_bug_for_bug():
     assert m.used == ref.used
 
 
-def test_clean_reclaim_requires_indexed_layer():
+def test_reference_layer_stays_strict_regardless_of_flag():
+    """The reference layer is the executable seed: it has no
+    strict_reclaim knob and replays the double-count sweep whatever the
+    config says, so reference-layer configs keep working under the
+    clean-reclaim default and equivalence suites opt the indexed side
+    back in explicitly."""
     fns = function_copies(DEFAULT_MIX, 4)
-    with pytest.raises(ValueError, match="strict_reclaim"):
-        make_server(ServerConfig(device_layer="reference",
-                                 strict_reclaim=False), fns=fns)
+    for flag in (False, True):
+        srv = make_server(ServerConfig(device_layer="reference",
+                                       batch_dispatch=False,
+                                       strict_reclaim=flag), fns=fns)
+        mgr = srv.control.devices[0].mem
+        assert isinstance(mgr, ReferenceDeviceMemoryManager)
+        assert not hasattr(mgr, "strict_reclaim")
+
+
+def test_indexed_layer_follows_config_flag():
+    fns = function_copies(DEFAULT_MIX, 4)
+    for flag in (False, True):
+        srv = make_server(ServerConfig(strict_reclaim=flag), fns=fns)
+        assert srv.control.devices[0].mem.strict_reclaim is flag
+    # unconfigured default retires the double-count quirk
+    srv = make_server(ServerConfig(), fns=fns)
+    assert srv.control.devices[0].mem.strict_reclaim is False
 
 
 def test_clean_reclaim_full_stack_under_pressure():
