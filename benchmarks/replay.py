@@ -1,0 +1,318 @@
+"""Open-loop Azure-trace replay: load-scaling sweep + policy gate on the
+wall-clock serving path.
+
+    PYTHONPATH=src python -m benchmarks.replay \
+        --sweep 1,2,5,10,20,50,100 [--n-shards 2] [--slo 0.25]
+    PYTHONPATH=src python -m benchmarks.replay --replay-compare
+
+Replays the ``azure-replay`` scenario (the real Azure Functions 2019
+minute-count CSV when ``$REPRO_AZURE_TRACE`` points at one, the
+documented synthetic fallback otherwise — same schema either way)
+through ``ShardedWallClockExecutor`` via ``repro.replay``: paced
+open-loop release at ``origin + t/speedup``, never early, per-invocation
+feeder lateness kept separate from queueing delay. Endpoints are
+``StubEndpoint`` with *real* execution and cold-start sleeps, so policy
+locality differences (warm-set thrash vs sticky reuse) cost wall time.
+
+``--sweep`` multiplies the replay rate 1x -> 100x over a fixed trace and
+reports, per point: released/completed, p50/p99/p999, SLO attainment,
+feeder-lateness p99, throughput — plus per-tenant and per-shard tails
+into ``results/bench/replay_tenants.csv``. The sweep stops early once
+the server saturates (SLO attainment below ``--saturation``): beyond
+that every point is just a longer backlog. A point whose feeder lateness
+p99 exceeds ``--max-lateness`` is marked ``feed_valid=False`` — its
+latencies measure the *feeder's* saturation, not the server's — and is
+excluded from saturation detection.
+
+``--replay-compare`` is the policy gate: mqfq-sticky vs fcfs at a pinned
+operating point (capacity-constrained devices, real cold-start sleeps,
+heavy-tailed azure-replay arrivals), gating the fcfs/mqfq-sticky p99
+ratio at ``REPLAY_P99_RATIO_MIN`` (median of 3 interleaved pairs;
+``CI_SPEEDUP_SLACK`` honored). Like every wall-clock gate in this repo
+it is load-sensitive: run it alone, not next to other CPU hogs.
+
+Every invocation appends a machine-readable record to
+``BENCH_scale.json`` via the shared ``benchmarks.common`` helper.
+"""
+from __future__ import annotations
+
+import argparse
+import csv
+import os
+import sys
+
+from benchmarks.common import (RESULTS_DIR, Bench, append_bench_record,
+                               ci_speedup_slack)
+
+# fcfs p99 / mqfq-sticky p99 at the pinned operating point below. The
+# two arms replay the identical paced trace; the sticky policy's
+# locality (device affinity + anticipatory keep-alive) cuts cold starts
+# ~60% (measured: ~82 vs ~196 of 599 dispatches), and with real
+# cold-start sleeps on the stub endpoints that difference is wall time
+# on fcfs's tail. Measured in-container: 1.5-1.8x across runs; pinned
+# with headroom for scheduler noise. NOTE the regime is deliberate:
+# cold-transfer-dominated (cold_delay >> exec_delay, capacity holding
+# ~20% of the working set). At *overload* with cheap colds the ordering
+# flips — fair queueing spreads the backlog across flows and fcfs's
+# single FIFO gets the better max-tail — so changing the operating
+# point below re-baselines the gate, not just re-noises it.
+REPLAY_P99_RATIO_MIN = 1.25
+
+# pinned operating point for --replay-compare (changing any of these
+# re-baselines the gate; keep in sync with the comment above)
+COMPARE = dict(n_fns=48, minutes=6, seed=7, mean_rpm=4.0,
+               speedup=150.0, n_devices=2, d=2, pool_size=12,
+               capacity_fraction=0.2, exec_delay=0.004,
+               cold_delay=0.5, upload_delay=0.2)
+
+DEFAULT_MULTIPLIERS = (1, 2, 5, 10, 20, 50, 100)
+
+
+def _slack() -> float:
+    return ci_speedup_slack()
+
+
+def _gate(value: float, minimum: float, what: str, failures: list) -> None:
+    eff = minimum * (1.0 - _slack())
+    if value < eff:
+        failures.append(f"{what} {value:.2f}x below the {eff:.2f}x "
+                        f"threshold (min {minimum}x, slack {_slack():g})")
+
+
+def build_replay_server(policy: str, sc, *, n_shards: int = 1,
+                        n_devices: int = 2, d: int = 2,
+                        pool_size: int = 16,
+                        capacity_fraction: float = 0.5,
+                        exec_delay: float = 0.004,
+                        cold_delay: float = 0.06,
+                        upload_delay: float = 0.02):
+    """Wall-clock server over stub endpoints with real service and
+    cold-start sleeps. ``capacity_fraction`` sizes each device's memory
+    as that fraction of the scenario's total working set — below ~1/
+    n_devices the warm set cannot all stay resident and policy locality
+    starts to matter."""
+    from repro.server import ServerConfig, StubEndpoint, make_server
+
+    endpoints = {f: StubEndpoint(f, s, delay=exec_delay,
+                                 cold_delay=cold_delay,
+                                 upload_delay=upload_delay)
+                 for f, s in sc.fns.items()}
+    working_set = sum(s.mem_bytes for s in sc.fns.values())
+    capacity = max(int(working_set * capacity_fraction),
+                   max(s.mem_bytes for s in sc.fns.values()) + 1)
+    cfg = ServerConfig(
+        executor="wallclock", policy=policy,
+        policy_kwargs={"T": 10.0} if policy.startswith("mqfq") else {},
+        d=d, n_devices=n_devices, pool_size=pool_size,
+        capacity_bytes=capacity,
+        sharding="hash" if n_shards > 1 else "none", n_shards=n_shards)
+    return make_server(cfg, fns=sc.fns, endpoints=endpoints)
+
+
+def run_point(policy: str, sc, speedup: float, *, slo_s: float,
+              max_lateness: float, n_shards: int = 1, **server_kw) -> dict:
+    """One replay at one rate multiplier: full lifecycle through
+    ``repro.replay.replay_open_loop``; returns the summary row."""
+    from repro.replay import replay_open_loop
+
+    srv = build_replay_server(policy, sc, n_shards=n_shards, **server_kw)
+    rr = replay_open_loop(srv, sc, speedup=speedup)
+    res = rr.result
+    p50, p99, p999 = res.latency_quantiles((0.5, 0.99, 0.999))
+    late_p99 = rr.lateness_quantile(0.99)
+    return {
+        "policy": policy, "speedup": speedup, "n_shards": n_shards,
+        "released": rr.released, "completed": res.completed_count,
+        "wall_s": round(rr.wall_s, 3),
+        "throughput_per_s": round(rr.throughput(), 1),
+        "p50_s": round(p50, 4), "p99_s": round(p99, 4),
+        "p999_s": round(p999, 4),
+        "slo_s": slo_s,
+        "slo_attainment": round(res.slo_attainment(slo_s), 4),
+        "lateness_p99_ms": round(late_p99 * 1e3, 3),
+        "lateness_max_ms": round(rr.max_lateness * 1e3, 3),
+        # latencies only measure the server if the feeder held schedule
+        "feed_valid": late_p99 <= max_lateness,
+        "_rr": rr,                    # stripped before CSV emission
+    }
+
+
+def _emit_tenant_rows(rows: list, sc, n_shards: int) -> None:
+    """Per-tenant and per-shard tails for every sweep point ->
+    results/bench/replay_tenants.csv."""
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    path = os.path.join(RESULTS_DIR, "replay_tenants.csv")
+    with open(path, "w", newline="") as f:
+        w = csv.writer(f)
+        w.writerow(["speedup", "group_kind", "group", "n",
+                    "p50_s", "p99_s", "p999_s", "slo_attainment"])
+        for row in rows:
+            rr = row["_rr"]
+            for tenant, r in sorted(rr.per_tenant_quantiles(
+                    sc, slo_s=row["slo_s"]).items()):
+                w.writerow([row["speedup"], "tenant", tenant, int(r["n"]),
+                            round(r["p50"], 4), round(r["p99"], 4),
+                            round(r["p999"], 4), round(r["slo"], 4)])
+            if n_shards > 1:
+                for k, r in sorted(rr.per_shard_quantiles(
+                        n_shards).items()):
+                    w.writerow([row["speedup"], "shard", k, int(r["n"]),
+                                round(r["p50"], 4), round(r["p99"], 4),
+                                round(r["p999"], 4), ""])
+    print(f"# per-tenant/per-shard tails -> {path}", file=sys.stderr)
+
+
+def sweep(args, bench: Bench) -> list:
+    """Load-scaling sweep: replay the same trace at increasing rate
+    multipliers until SLO attainment collapses."""
+    from repro.workloads.scenarios import make_scenario
+
+    sc = make_scenario("azure-replay", n_fns=args.flows,
+                       minutes=args.minutes, seed=args.seed,
+                       mean_rpm=args.mean_rpm)
+    print(f"# scenario: {sc.description}", file=sys.stderr)
+    rows = []
+    for mult in args.sweep:
+        speedup = args.base_speedup * mult
+        row = run_point(args.policy, sc, speedup, slo_s=args.slo,
+                        max_lateness=args.max_lateness,
+                        n_shards=args.n_shards,
+                        n_devices=args.n_devices, d=args.d)
+        rows.append(row)
+        bench.add(**{k: v for k, v in row.items() if k != "_rr"})
+        flag = "" if row["feed_valid"] else "  [FEEDER-SATURATED]"
+        print(f"# replay x{mult:<4g} ({speedup:g}x wall): "
+              f"{row['completed']} done in {row['wall_s']:6.2f}s  "
+              f"p50 {row['p50_s']:7.4f}s  p99 {row['p99_s']:7.4f}s  "
+              f"p999 {row['p999_s']:7.4f}s  slo {row['slo_attainment']:6.2%}"
+              f"  late-p99 {row['lateness_p99_ms']:6.2f}ms{flag}",
+              file=sys.stderr)
+        if row["feed_valid"] \
+                and row["slo_attainment"] < args.saturation:
+            print(f"# saturated at x{mult:g} (SLO attainment "
+                  f"{row['slo_attainment']:.2%} < {args.saturation:.0%}); "
+                  f"stopping sweep", file=sys.stderr)
+            break
+    _emit_tenant_rows(rows, sc, args.n_shards)
+    for row in rows:
+        del row["_rr"]
+    return rows
+
+
+def replay_compare(args, bench: Bench, failures: list,
+                   speedups: dict) -> None:
+    """The policy gate: mqfq-sticky vs fcfs on the identical paced
+    trace at the pinned operating point, p99 ratio gated. Median of 3
+    interleaved pairs — wall-clock measurements on shared boxes see
+    transient load spikes, and the median pair rejects them."""
+    from repro.workloads.scenarios import make_scenario
+
+    op = COMPARE
+    sc = make_scenario("azure-replay", n_fns=op["n_fns"],
+                       minutes=op["minutes"], seed=op["seed"],
+                       mean_rpm=op["mean_rpm"])
+    print(f"# scenario: {sc.description}", file=sys.stderr)
+    server_kw = dict(n_devices=op["n_devices"], d=op["d"],
+                     pool_size=op["pool_size"],
+                     capacity_fraction=op["capacity_fraction"],
+                     exec_delay=op["exec_delay"],
+                     cold_delay=op["cold_delay"],
+                     upload_delay=op["upload_delay"])
+    ratios = []
+    for _ in range(3):
+        pair = {}
+        for policy in ("mqfq-sticky", "fcfs"):
+            row = run_point(policy, sc, op["speedup"], slo_s=args.slo,
+                            max_lateness=args.max_lateness, **server_kw)
+            del row["_rr"]
+            bench.add(**row)
+            pair[policy] = row
+            print(f"#   [{policy:11s}] p99 {row['p99_s']:7.4f}s  "
+                  f"slo {row['slo_attainment']:6.2%}  "
+                  f"late-p99 {row['lateness_p99_ms']:5.2f}ms",
+                  file=sys.stderr)
+            if not row["feed_valid"]:
+                failures.append(
+                    f"replay gate feeder saturated under {policy} "
+                    f"(lateness p99 {row['lateness_p99_ms']}ms > "
+                    f"{args.max_lateness * 1e3:g}ms): the pair measures "
+                    f"the feeder, not the policies — rerun on an idle "
+                    f"box")
+                return
+        ratios.append((pair["fcfs"]["p99_s"]
+                       / max(pair["mqfq-sticky"]["p99_s"], 1e-9),
+                       pair))
+    ratios.sort(key=lambda r: r[0])
+    ratio, pair = ratios[1]
+    speedups["replay_fcfs_vs_mqfq_sticky_p99"] = round(ratio, 2)
+    print(f"# replay p99: fcfs {pair['fcfs']['p99_s']:.4f}s vs "
+          f"mqfq-sticky {pair['mqfq-sticky']['p99_s']:.4f}s "
+          f"({ratio:.2f}x median-of-3)", file=sys.stderr)
+    _gate(ratio, REPLAY_P99_RATIO_MIN,
+          "replay fcfs/mqfq-sticky p99 ratio", failures)
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--sweep", default="",
+                    help="comma-separated rate multipliers "
+                         "(e.g. 1,2,5,10,20,50,100)")
+    ap.add_argument("--replay-compare", action="store_true",
+                    help="gated mqfq-sticky vs fcfs p99 comparison at "
+                         "the pinned operating point")
+    ap.add_argument("--policy", default="mqfq-sticky")
+    ap.add_argument("--flows", type=int, default=48, dest="flows",
+                    help="functions in the replayed trace (n_fns)")
+    ap.add_argument("--minutes", type=int, default=6,
+                    help="trace minutes replayed")
+    ap.add_argument("--mean-rpm", type=float, default=3.0,
+                    help="fallback generator's mean arrivals/min/fn "
+                         "(ignored when $REPRO_AZURE_TRACE is set)")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--base-speedup", type=float, default=120.0,
+                    help="wall-time compression at multiplier 1 (the "
+                         "trace's minutes replay in minutes/speedup)")
+    ap.add_argument("--n-shards", type=int, default=1)
+    ap.add_argument("--n-devices", type=int, default=2)
+    ap.add_argument("--d", type=int, default=2)
+    ap.add_argument("--slo", type=float, default=0.25,
+                    help="per-invocation latency SLO (seconds)")
+    ap.add_argument("--saturation", type=float, default=0.5,
+                    help="stop the sweep once SLO attainment drops "
+                         "below this fraction")
+    ap.add_argument("--max-lateness", type=float, default=0.05,
+                    help="feeder lateness p99 (s) above which a point's "
+                         "latencies are marked feed-invalid")
+    args = ap.parse_args(argv)
+    args.sweep = [float(m) for m in args.sweep.split(",") if m]
+
+    bench = Bench("replay")
+    failures: list = []
+    speedups: dict = {}
+    sweep_rows: list = []
+    print("name,us_per_call,derived")
+    if args.sweep:
+        sweep_rows = sweep(args, bench)
+    if args.replay_compare:
+        replay_compare(args, bench, failures, speedups)
+    if not args.sweep and not args.replay_compare:
+        ap.error("nothing to do: pass --sweep and/or --replay-compare")
+
+    bench.emit()
+    append_bench_record({
+        "argv": " ".join(sys.argv[1:]),
+        "benchmark": "replay",
+        "rows": [{k: r[k] for k in ("policy", "speedup", "completed",
+                                    "wall_s", "throughput_per_s",
+                                    "p99_s", "slo_attainment",
+                                    "lateness_p99_ms", "feed_valid")}
+                 for r in sweep_rows],
+        "speedups": speedups,
+        "ci_speedup_slack": _slack(),
+    })
+    if failures:
+        raise SystemExit("; ".join(failures))
+
+
+if __name__ == "__main__":
+    main()

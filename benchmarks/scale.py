@@ -84,7 +84,6 @@ threshold by 20%).
 from __future__ import annotations
 
 import argparse
-import json
 import os
 import resource
 import subprocess
@@ -92,7 +91,8 @@ import sys
 import time
 import tracemalloc
 
-from benchmarks.common import Bench
+from benchmarks.common import (Bench, append_bench_record,
+                               ci_speedup_slack)
 
 # acceptance thresholds (pre-slack): indexed-vs-reference scheduler,
 # indexed-vs-reference device layer, transition-vs-per_event control
@@ -133,17 +133,11 @@ DATAPATH_P99_FLOOR_S = 0.01
 SHARD_CAPACITY_FRACTION = 0.6
 SHARD_TOTAL_DEVICES = 8
 SHARD_SWEEP = (1, 2, 4, 8)
-BENCH_JSON = os.path.join(os.path.dirname(os.path.dirname(
-    os.path.abspath(__file__))), "BENCH_scale.json")
 
-
-def _slack() -> float:
-    """CI_SPEEDUP_SLACK: fractional threshold headroom (loaded machine)."""
-    try:
-        return max(0.0, min(0.9, float(
-            os.environ.get("CI_SPEEDUP_SLACK", "0"))))
-    except ValueError:
-        return 0.0
+# CI_SPEEDUP_SLACK handling now lives in benchmarks.common (shared with
+# benchmarks.replay); the local name survives as an alias for the
+# gate helper below
+_slack = ci_speedup_slack
 
 
 def _gate(value: float, minimum: float, what: str, failures: list) -> None:
@@ -505,7 +499,10 @@ def _steady_overheads(res) -> list:
 
 
 def _quantile(xs: list, q: float) -> float:
-    return xs[int(q * (len(xs) - 1))] if xs else 0.0
+    # shared nearest-rank helper (xs arrives sorted); the old local copy
+    # truncated the rank and floor-biased the gated p99
+    from repro.server.metrics import nearest_rank
+    return nearest_rank(xs, q)
 
 
 def _datapath_storm_run(prefetch: bool, n_events: int, seed: int):
@@ -691,7 +688,9 @@ def _shard_worker(k: int, n_shards: int, n_inv: int, flows: int,
     srv = make_server(cfg, endpoints=eps, fns=my_fns,
                       vt_bus=ArrayVTBus(vt_arr), vt_slots=[k])
     srv.start()
-    stream = sc.shard_streams(n_shards)[k]
+    # filter mode: this process consumes ONLY its own partition, the
+    # demux default would buffer every other shard's events unread
+    stream = sc.shard_streams(n_shards, mode="filter")[k]
     t0 = _time.perf_counter()
     submitted = 0
     for ev in stream:
@@ -883,23 +882,10 @@ def _event_profile(args, bench) -> None:
           f"dispatch/handlers)", file=sys.stderr)
 
 
-def _git_sha() -> str:
-    try:
-        return subprocess.run(
-            ["git", "rev-parse", "--short", "HEAD"],
-            cwd=os.path.dirname(BENCH_JSON), capture_output=True,
-            text=True, timeout=10).stdout.strip() or "unknown"
-    except Exception:
-        return "unknown"
-
-
 def _append_bench_json(args, headline: list, speedups: dict) -> None:
-    """Persist the perf trajectory: one record per benchmark invocation,
-    appended to BENCH_scale.json at the repo root so regressions across
-    PRs are visible in review diffs."""
-    record = {
-        "git_sha": _git_sha(),
-        "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S%z"),
+    """Persist the perf trajectory via the shared helper (stamps git SHA
+    + timestamp, appends to BENCH_scale.json at the repo root)."""
+    append_bench_record({
         "argv": " ".join(sys.argv[1:]),
         "flows": args.flows,
         "policy": args.policy,
@@ -912,19 +898,7 @@ def _append_bench_json(args, headline: list, speedups: dict) -> None:
             for r in headline],
         "speedups": speedups,
         "ci_speedup_slack": _slack(),
-    }
-    history = []
-    if os.path.exists(BENCH_JSON):
-        try:
-            with open(BENCH_JSON) as f:
-                history = json.load(f)
-        except (ValueError, OSError):
-            history = []
-    history.append(record)
-    with open(BENCH_JSON, "w") as f:
-        json.dump(history, f, indent=2)
-        f.write("\n")
-    print(f"# perf record appended -> {BENCH_JSON}", file=sys.stderr)
+    })
 
 
 def _emit_stage_breakdown(rows: list) -> None:

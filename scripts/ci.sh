@@ -71,6 +71,18 @@ echo "== shard-scaling gate: 4 shard processes vs 1 on the wall-clock stub workl
 # captured directly.
 python -m benchmarks.scale --sizes '' --flows 256 --shard-compare 12000
 
+echo "== open-loop replay gate: mqfq-sticky vs fcfs p99 on the paced azure-replay trace (median-of-3 pairs) =="
+# the PR-7 gate: the Azure-trace open-loop replay harness
+# (repro.replay + benchmarks/replay.py). Both arms replay the identical
+# paced arrival trace through the wall-clock executor over stub
+# endpoints with real cold-start sleeps; sticky locality cuts cold
+# starts ~60%, gated as the fcfs/mqfq-sticky p99 ratio >= 1.25x
+# (measured ~1.7x). A feeder that cannot hold the release schedule
+# (lateness p99 > 50 ms) fails the gate as *invalid* rather than
+# reporting a bogus ratio — like every wall-clock gate here: run it
+# alone. CI_SPEEDUP_SLACK honored.
+python -m benchmarks.replay --replay-compare
+
 echo "== smoke: fig6 through repro.server =="
 python -m benchmarks.run --only fig6
 

@@ -29,6 +29,12 @@ class Invocation:
     device_id: int = 0
     charged_tau: Optional[float] = None  # tau charged to VT at dispatch
     request: Optional[dict] = None       # wall-clock request payload
+    # open-loop feeder slip: how late the replay feeder released this
+    # arrival relative to its trace timestamp (>= 0 — feeders never
+    # release early). Separate from queueing delay: ``arrival`` is
+    # stamped at actual release, so latency/queue_time start *after*
+    # the slip and feeder saturation can't masquerade as queueing.
+    lateness: Optional[float] = None
 
     @property
     def latency(self) -> float:

@@ -35,7 +35,7 @@ from repro.server.events import (CompleteEvent, DispatchEvent, EventBus,
 from repro.server.executors import (Server, ShardedWallClockExecutor,
                                     SimExecutor, WallClockExecutor)
 from repro.server.metrics import (MergedFairness, MergedPools, RunResult,
-                                  StreamingStats)
+                                  StreamingStats, nearest_rank, quantile)
 from repro.server.shard import (ArrayVTBus, LocalVTBus, ShardedControlPlane,
                                 ShardRouter, hash_shard)
 from repro.server.stub import StubEndpoint
@@ -49,4 +49,5 @@ __all__ = [
     "LocalVTBus", "ArrayVTBus", "hash_shard",
     "MergedFairness", "MergedPools",
     "RunResult", "StreamingStats", "StubEndpoint",
+    "nearest_rank", "quantile",
 ]

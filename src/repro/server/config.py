@@ -111,8 +111,9 @@ class ServerConfig:
     # "lean" streams aggregates (constant memory at any trace length)
     metrics: str = "full"
     # named workload scenario (repro.workloads.scenarios): when set and
-    # fns= is omitted, the server builds the scenario's function mix and
-    # ``run_scenario()`` replays its (streaming) arrival process
+    # fns= is omitted, the server builds the scenario's function mix;
+    # ``run_scenario()`` replays its stream on the virtual clock (sim),
+    # ``replay_open_loop()`` paces it in real time (wallclock)
     scenario: str = ""
     scenario_kwargs: Mapping = field(default_factory=dict)
 
@@ -215,10 +216,16 @@ def make_server(config: ServerConfig, *,
         executor = SimExecutor(control, config)
     elif config.executor == "wallclock":
         if config.scenario:
-            raise ValueError(
-                "scenario= is sim-only: the wallclock executor is driven "
-                "open-loop via submit(); replay the scenario's stream "
-                "yourself with make_scenario(...).stream()")
+            # historically rejected ("drive it via submit()"); now the
+            # open-loop replay harness (repro.replay) is the wallclock
+            # consumer of a configured scenario: fns come from the mix,
+            # server.replay_open_loop() paces its stream. Endpoints are
+            # still the caller's job — one per scenario function.
+            from repro.workloads.scenarios import make_scenario
+            scenario = make_scenario(config.scenario,
+                                     **dict(config.scenario_kwargs))
+            if fns is None:
+                fns = scenario.fns
         if endpoints is None:
             raise ValueError("wallclock executor requires endpoints=")
         if fns is None:

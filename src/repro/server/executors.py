@@ -778,6 +778,13 @@ class Server:
             raise ValueError("ServerConfig.scenario was not set")
         return self.run_trace(self.scenario.stream())
 
+    def replay_open_loop(self, scenario=None, **kw):
+        """Open-loop wall-clock replay (see ``repro.replay``): paced
+        release at trace timestamps, per-invocation lateness, sharded
+        feeding. Wall-clock executors only."""
+        from repro.replay import replay_open_loop
+        return replay_open_loop(self, scenario, **kw)
+
     # -- wallclock -----------------------------------------------------------
     def _wallclock(self):
         if not isinstance(self.executor,

@@ -7,13 +7,42 @@ use. The simulator's historical ``SimResult`` name is an alias.
 """
 from __future__ import annotations
 
+import math
 import random
 import statistics
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 from repro.core.fairness import FairnessTracker
 from repro.runtime.invocation import Invocation
+
+
+def nearest_rank(sorted_xs: Sequence[float], q: float) -> float:
+    """Nearest-rank quantile over an already-sorted sequence: the
+    smallest element whose cumulative frequency is >= q, i.e. index
+    ``ceil(q*n) - 1`` (zero-based), clamped to the valid range.
+
+    This is THE quantile helper — ``StreamingStats``, ``RunResult`` and
+    the benchmarks all route through it. The three historical copies
+    indexed ``sorted(xs)[int(q*(n-1))]``, which *truncates* the rank and
+    floor-biases upper tails: at n=5 the "p90" was the 4th value, not
+    the max, and a p999 over a few thousand samples could sit a full
+    rank below the nearest-rank definition. Tail gates built on those
+    numbers under-reported regressions."""
+    n = len(sorted_xs)
+    if n == 0:
+        return 0.0
+    i = math.ceil(q * n) - 1
+    if i < 0:
+        i = 0
+    elif i >= n:
+        i = n - 1
+    return sorted_xs[i]
+
+
+def quantile(xs: Sequence[float], q: float) -> float:
+    """Nearest-rank quantile of an unsorted sequence (sorts a copy)."""
+    return nearest_rank(sorted(xs), q)
 
 
 class StreamingStats:
@@ -58,10 +87,15 @@ class StreamingStats:
         return self.latency_sum / self.n if self.n else 0.0
 
     def quantile(self, q: float) -> float:
-        if not self._reservoir:
+        return nearest_rank(sorted(self._reservoir), q)
+
+    def slo_attainment(self, slo_s: float) -> float:
+        """Fraction of completions within ``slo_s`` end-to-end latency,
+        estimated from the reservoir (exact while n <= RESERVOIR)."""
+        res = self._reservoir
+        if not res:
             return 0.0
-        lats = sorted(self._reservoir)
-        return lats[int(q * (len(lats) - 1))]
+        return sum(1 for lat in res if lat <= slo_s) / len(res)
 
 
 class MergedPools:
@@ -175,13 +209,39 @@ class RunResult:
         if not self.invocations and self.stats is not None:
             return self.stats.quantile(q)
         lats = sorted(i.latency for i in self.invocations if i.done)
-        return lats[int(q * (len(lats) - 1))] if lats else 0.0
+        return nearest_rank(lats, q)
+
+    def latency_quantiles(self, qs: Sequence[float]) -> List[float]:
+        """Several quantiles off one sort (tail reports ask for
+        p50/p99/p999 together)."""
+        if not self.invocations and self.stats is not None:
+            lats = sorted(self.stats._reservoir)
+        else:
+            lats = sorted(i.latency for i in self.invocations if i.done)
+        return [nearest_rank(lats, q) for q in qs]
 
     def p50_latency(self) -> float:
         return self.latency_quantile(0.50)
 
     def p99_latency(self) -> float:
         return self.latency_quantile(0.99)
+
+    def p999_latency(self) -> float:
+        return self.latency_quantile(0.999)
+
+    def slo_attainment(self, slo_s: float) -> float:
+        """Fraction of completed invocations with end-to-end latency
+        within ``slo_s`` (the replay harness's SLO curves; exact on full
+        metrics, reservoir-estimated on lean runs)."""
+        if not self.invocations and self.stats is not None:
+            return self.stats.slo_attainment(slo_s)
+        done = tot = 0
+        for i in self.invocations:
+            if i.done:
+                tot += 1
+                if i.latency <= slo_s:
+                    done += 1
+        return done / tot if tot else 0.0
 
     # -- utilization ---------------------------------------------------------
     def mean_utilization(self) -> float:

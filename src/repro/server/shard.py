@@ -267,6 +267,10 @@ class ShardedControlPlane:
         self._n = S
         self._n_dev = config.n_devices
         self._cursor = 0
+        #: public shard count (``_n`` predates it; external consumers —
+        #: the replay feeders, benchmarks — should read this, not the
+        #: private field)
+        self.n_shards = S
         self.router = ShardRouter(config.sharding, S,
                                   getattr(config, "shard_imbalance", 2.0))
         self._route_fast = (self._route_hash

@@ -17,14 +17,25 @@ from repro.workloads.spec import FunctionSpec
 
 class StubEndpoint:
     def __init__(self, fn_id: str, spec: FunctionSpec,
-                 delay: Optional[float] = 0.0):
+                 delay: Optional[float] = 0.0,
+                 cold_delay: Optional[float] = 0.0,
+                 upload_delay: float = 0.0):
         """``delay``: real seconds to hold the endpoint busy per request;
         ``None`` sleeps the spec's warm time, making wall-clock event
         ordering (dispatch -> follow-up choose -> ... -> completion)
-        mirror the virtual clock's."""
+        mirror the virtual clock's.
+
+        ``cold_delay`` / ``upload_delay``: real seconds slept inside
+        ``compile`` / ``upload`` (``cold_delay=None`` sleeps the spec's
+        ``cold_init``). Defaults keep the historical instant-cold
+        behavior; the replay benchmarks set them so locality differences
+        between policies (warm-set thrash vs sticky reuse) cost real
+        wall time instead of being invisible to the stub."""
         self.fn_id = fn_id
         self.spec = spec
         self.delay = spec.warm_time if delay is None else delay
+        self.cold_delay = spec.cold_init if cold_delay is None else cold_delay
+        self.upload_delay = upload_delay
         self.weight_bytes = spec.mem_bytes
         self.lock = threading.Lock()
         self.last_use = 0.0
@@ -45,15 +56,19 @@ class StubEndpoint:
         return self._resident
 
     def compile(self) -> float:
+        if self.cold_delay:
+            time.sleep(self.cold_delay)
         self._compiled = True
         self._resident = True
         self.compile_count += 1
-        return 0.0
+        return self.cold_delay
 
     def upload(self) -> float:
+        if self.upload_delay:
+            time.sleep(self.upload_delay)
         self._resident = True
         self.upload_count += 1
-        return 0.0
+        return self.upload_delay
 
     def evict(self) -> None:
         self._resident = False

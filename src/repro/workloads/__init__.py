@@ -3,3 +3,7 @@ from repro.workloads.traces import (TraceEvent, zipf_trace, azure_trace,
                                     make_workload, zipf_stream, azure_stream,
                                     merge_streams)
 from repro.workloads.scenarios import SCENARIOS, Scenario, make_scenario
+from repro.workloads.azure_loader import (AzureRow, counts_stream,
+                                          iter_azure_rows,
+                                          load_azure_scenario,
+                                          synthetic_azure_rows)

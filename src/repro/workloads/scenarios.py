@@ -55,6 +55,10 @@ class Scenario:
     description: str
     make_stream: Callable[[], Iterator[TraceEvent]]
     max_events: Optional[int] = None
+    # fn_id -> tenant (billing/SLO aggregation unit). None = derive from
+    # the fn_id's base-family prefix ("imagenet-3" -> "imagenet"); the
+    # Azure replay loader fills it with the trace's HashOwner column.
+    tenants: Optional[Dict[str, str]] = None
 
     def stream(self) -> Iterator[TraceEvent]:
         s = self.make_stream()
@@ -62,27 +66,106 @@ class Scenario:
             s = itertools.islice(s, self.max_events)
         return s
 
+    def tenant_of(self, fn_id: str) -> str:
+        """Tenant owning ``fn_id`` (per-tenant tail/SLO reporting)."""
+        if self.tenants is not None:
+            return self.tenants.get(fn_id, fn_id)
+        return fn_id.rsplit("-", 1)[0]
+
     def shard_streams(self, n_shards: int,
-                      route: Optional[Callable[[str], int]] = None
-                      ) -> list:
+                      route: Optional[Callable[[str], int]] = None,
+                      mode: str = "demux",
+                      buffer_cap: Optional[int] = 65536) -> list:
         """Per-shard arrival fan-out: the scenario's (bounded) stream
         split into ``n_shards`` time-sorted sub-streams by ``route``
         (fn_id -> shard; defaults to the control plane's stable crc32
         hash router, so a fan-out partition agrees with a
-        ``sharding="hash"`` server's own routing). Each sub-stream is an
-        independent lazy filter over its own replay of the scenario —
-        shard feeders (threads or processes) can consume them without a
-        shared merge lock. ``max_events`` caps the *global* stream
-        before the split, so the union over shards is exactly
-        ``stream()``."""
+        ``sharding="hash"`` server's own routing). ``max_events`` caps
+        the *global* stream before the split, so the union over shards
+        is exactly ``stream()``.
+
+        ``mode="demux"`` (default): ONE shared replay of the scenario,
+        split single-pass into per-shard buffers — O(total events) RNG
+        work for the whole fan-out, thread-safe, built for concurrent
+        consumers (the open-loop shard feeders). A consumer that runs
+        far ahead of its siblings accumulates their events in their
+        buffers; ``buffer_cap`` bounds that imbalance and raises with
+        guidance instead of silently holding the whole trace (pass
+        ``None`` to unbound it). Consuming only ONE of the returned
+        streams to exhaustion is exactly that worst case — use
+        ``mode="filter"`` there.
+
+        ``mode="filter"``: the historical implementation, retained as
+        the differential reference and for single-stream consumers
+        (e.g. one shard process that only wants its own partition):
+        each sub-stream independently replays the scenario and filters,
+        O(n_shards x total events) RNG regeneration in aggregate but
+        zero cross-stream state."""
         if route is None:
             from repro.server.shard import hash_shard
             route = lambda fn_id: hash_shard(fn_id, n_shards)
 
-        def one(k: int) -> Iterator[TraceEvent]:
-            return (ev for ev in self.stream() if route(ev.fn_id) == k)
+        if mode == "filter":
+            def one(k: int) -> Iterator[TraceEvent]:
+                return (ev for ev in self.stream() if route(ev.fn_id) == k)
+            return [one(k) for k in range(n_shards)]
+        if mode != "demux":
+            raise ValueError(f"unknown shard_streams mode {mode!r}; "
+                             f"expected 'demux' or 'filter'")
+        demux = _StreamDemux(self.stream(), n_shards, route, buffer_cap)
+        return [demux.stream(k) for k in range(n_shards)]
 
-        return [one(k) for k in range(n_shards)]
+
+class _StreamDemux:
+    """Single-pass fan-out of one time-sorted event stream into N
+    per-shard sub-streams. Consumers pull: a shard whose buffer is empty
+    advances the shared iterator under a lock, parking events routed to
+    other shards in their buffers. Per-shard order is the global
+    stream's arrival order restricted to that shard — identical to the
+    filter implementation (tests/test_replay.py proves union and
+    per-shard order equivalence)."""
+
+    def __init__(self, stream: Iterator[TraceEvent], n_shards: int,
+                 route: Callable[[str], int],
+                 buffer_cap: Optional[int]):
+        import collections
+        import threading
+        self._it = iter(stream)
+        self._route = route
+        self._bufs = [collections.deque() for _ in range(n_shards)]
+        self._cap = buffer_cap
+        self._lock = threading.Lock()
+        self._done = False
+
+    def stream(self, k: int) -> Iterator[TraceEvent]:
+        buf = self._bufs[k]
+        route = self._route
+        bufs = self._bufs
+        cap = self._cap
+        while True:
+            if not buf:
+                with self._lock:
+                    # re-check under the lock: a sibling may have parked
+                    # events for us while we waited on it
+                    while not buf and not self._done:
+                        ev = next(self._it, None)
+                        if ev is None:
+                            self._done = True
+                            break
+                        j = route(ev.fn_id)
+                        b = bufs[j]
+                        b.append(ev)
+                        if j != k and cap is not None and len(b) > cap:
+                            raise RuntimeError(
+                                f"shard_streams demux: shard {j}'s "
+                                f"buffer exceeded {cap} events while "
+                                f"shard {k} consumed — consumers are "
+                                f"too imbalanced (or only one stream "
+                                f"is being drained; use mode='filter' "
+                                f"for that, or raise buffer_cap)")
+                if not buf:
+                    return
+            yield buf.popleft()
 
 
 SCENARIOS: Dict[str, Callable[..., Scenario]] = {}
@@ -294,8 +377,12 @@ def azure_longtail(n_fns: int = 240, duration: float = float("inf"),
                               duration)
         return merge_streams(one(f) for f in fns)
 
+    # trace_id is part of the workload's identity (it selects the Table-3
+    # mix AND the RNG seed): surface it so benchmark CSVs carrying the
+    # description are self-identifying
     return Scenario("azure-longtail", fns,
-                    f"{n_fns} fns, {scale:g}x Azure-like intensity",
+                    f"{n_fns} fns, {scale:g}x Azure-like intensity, "
+                    f"trace_id={trace_id}",
                     make_stream, max_events)
 
 

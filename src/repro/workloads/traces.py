@@ -118,15 +118,31 @@ def zipf_stream(fns: Dict[str, FunctionSpec], duration: float,
     return merge_streams(stream(f, r) for f, r in rates.items())
 
 
+# per-trace-id arrival-intensity multipliers (approximate Table-3 util
+# spread); the list length defines the valid trace_id range
+AZURE_TRACE_INTENSITY = (0.55, 0.65, 0.75, 1.0, 1.25, 0.6, 1.35, 0.65,
+                         0.85)
+
+
 def azure_params(fns: Dict[str, FunctionSpec], trace_id: int = 4,
                  scale: float = 1.0) -> Dict[str, Tuple[float, float]]:
     """Per-function (mean_iat, weibull_shape) for an Azure-like mix.
-    ``trace_id`` seeds the mix (the paper's Table 3 uses 9 samples of
-    varying intensity); ``scale`` multiplies every arrival rate."""
+    ``trace_id`` selects the mix (the paper's Table 3 uses 9 samples of
+    varying intensity); ``scale`` multiplies every arrival rate.
+
+    Exactly 9 intensity profiles exist. Ids outside [0, 9) used to be
+    silently folded ``trace_id % 9`` — same intensity bucket but a
+    *different* RNG seed, so e.g. trace 12 looked like "trace 3" in a
+    benchmark CSV while sampling a mix trace 3 never produced. That
+    aliasing is now an error."""
+    if not 0 <= trace_id < len(AZURE_TRACE_INTENSITY):
+        raise ValueError(
+            f"trace_id must be in [0, {len(AZURE_TRACE_INTENSITY)}) — the "
+            f"paper's Table 3 has exactly {len(AZURE_TRACE_INTENSITY)} "
+            f"trace samples; got {trace_id}")
     rng = random.Random(1000 + trace_id)
     # intensity profile per trace id (approximate Table-3 util spread)
-    intensity = [0.55, 0.65, 0.75, 1.0, 1.25, 0.6, 1.35, 0.65, 0.85][
-        trace_id % 9] * scale
+    intensity = AZURE_TRACE_INTENSITY[trace_id] * scale
     out: Dict[str, Tuple[float, float]] = {}
     for fid in fns:
         # mean IAT lognormal: heavy right tail (rare functions); median
