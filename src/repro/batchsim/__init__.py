@@ -1,0 +1,61 @@
+"""Vectorized MQFQ-Sticky batch simulator: whole sensitivity sweeps in
+one device launch.
+
+The pure-Python control plane (``repro.server``) is GIL-bound near ~85k
+decisions/s/shard; the next 10-100x is structural. This package runs
+*many simulations at once*: all flow/queue/device/warm-pool state lives
+in fixed-shape arrays (``state.py``), one simulated configuration's
+event loop is a jitted ``lax.while_loop`` step function (``step.py``)
+that reproduces the scalar plane's semantics — Eq.-1 eligibility +
+throttle (see ``repro.core.mqfq.throttled`` / ``repro.core.index
+.eligible``), sticky tie-break (``repro.core.index.candidate_key``), VT
+advance, D-token accounting, anticipatory TTL lapse, warm-pool
+hit/miss with the scalar cold-cost model — and ``vmap`` across the
+config axis turns a (T, alpha, D, policy, weights) grid into a single
+XLA launch (``sweep.py``).
+
+Correctness follows the repo's load-bearing convention: the scalar
+``SimExecutor`` stays the reference, and ``tests/test_batchsim.py``
+proves per-invocation dispatch-order and final-metric agreement on
+small cases across policies x T x D x memory pressure. Runs on the JAX
+CPU backend (no GPU required — tier-1 exercises it there); float64 is
+enabled because the scalar plane is float64 and the differential suite
+compares against it.
+"""
+from __future__ import annotations
+
+import os
+
+# the step function is ~200 tiny elementwise passes per event; XLA:CPU's
+# thunk runtime adds per-op dispatch overhead that costs ~15% of the
+# whole sweep at fig8 scale (measured 0.66s -> 0.55s warm), so prefer
+# the legacy emitter. Honored only if the backend is not yet
+# initialized; a user-set value for the same flag is left alone.
+_FLAG = "--xla_cpu_use_thunk_runtime=false"
+if "--xla_cpu_use_thunk_runtime" not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "") + " " + _FLAG).strip()
+
+import jax  # noqa: E402
+
+# the scalar plane computes in python floats (f64); without this the
+# batch plane would silently round every VT/latency to f32 and the
+# differential suite could never hold tight tolerances. Existing repo
+# JAX code (training/, kernels/, runtime/device.py) pins explicit
+# float32 dtypes, so flipping the x64 default is safe for it.
+jax.config.update("jax_enable_x64", True)
+
+from repro.batchsim.state import (ACTIVE, COLD, FAM_FCFS, FAM_MQFQ,  # noqa: E402
+                                  FAM_SJF, HOST_WARM, INACTIVE, THROTTLED,
+                                  WARM, build_consts, init_state,
+                                  make_params)
+from repro.batchsim.step import simulate_one  # noqa: E402
+from repro.batchsim.sweep import (fig8_grid, run_batch,  # noqa: E402
+                                  run_scalar_reference)
+
+__all__ = [
+    "ACTIVE", "COLD", "FAM_FCFS", "FAM_MQFQ", "FAM_SJF", "HOST_WARM",
+    "INACTIVE", "THROTTLED", "WARM", "build_consts", "init_state",
+    "make_params", "simulate_one", "fig8_grid", "run_batch",
+    "run_scalar_reference",
+]

@@ -1,0 +1,253 @@
+"""Struct-of-arrays state for the vectorized batch simulator.
+
+Three pytrees flow through ``step.simulate_one(p, c, st)``:
+
+  - ``c`` (consts, shared across the config axis, ``in_axes=None``):
+    the padded trace (``workloads.traces.padded_arrivals``) plus
+    per-function spec arrays and the creation-order ranks the scalar
+    plane tie-breaks on. Passed as *traced* arrays so every sweep with
+    the same shapes reuses one compiled executable.
+  - ``p`` (per-config params, ``in_axes=0``): one leading config axis
+    over every knob a sweep can vary — policy family, T, alpha, sticky,
+    vt_by_service, deficit_vt, D, pool size, memory capacity, H2D
+    bandwidth, beta, fairness window, per-flow weights, RNG key.
+  - ``st`` (mutable state, ``in_axes=0``): fixed-shape arrays for flow
+    queues (VT, tau/IAT estimates, backlog counts, the
+    Active/Throttled/Inactive machine), the device memory manager
+    (resident bits, upload ETAs, LRU stamps), the warm pool (container
+    slots + the scalar pool's idle/eviction orderings), in-flight
+    completion slots, the fairness tracker, the executor bookkeeping
+    (arrival cursor, armed-timer stack, virtual clock) and per-
+    invocation output records.
+
+Times are float64 (x64 is enabled in ``repro.batchsim``): the scalar
+plane is python floats, and the differential suite compares against
+it. Counts and indices are int32 on purpose — an event step is ~200
+small elementwise passes and the sweep is memory-bandwidth bound at
+fig8 scale, so halving the integer traffic is a measurable slice of
+the whole sweep; no count here can approach 2^31 (events, containers,
+flows, windows are all trace-bounded).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from repro.core.flow import FlowQueue
+from repro.workloads.traces import PaddedArrivals
+
+# QueueState encoding (FlowQueue.state is an enum in the scalar plane)
+INACTIVE, ACTIVE, THROTTLED = 0, 1, 2
+# start types (scalar plane: WarmPool returns "cold"/"warm"/"host_warm")
+COLD, WARM, HOST_WARM = 0, 1, 2
+START_TYPE_NAMES = ("cold", "warm", "host_warm")
+# policy families
+FAM_MQFQ, FAM_FCFS, FAM_SJF = 0, 1, 2
+# columns of the per-invocation output record st["o_rec"] (all f64;
+# start type and order are small integers, exact in f64)
+REC_COLS = ("dispatch", "completion", "service", "overhead", "start",
+            "order")
+
+# FlowQueue's moving-estimate constants, read off the scalar dataclass
+# so the mirror can never drift from it silently
+EMA = FlowQueue.EMA
+TAU0 = FlowQueue.__dataclass_fields__["tau"].default
+IAT0 = FlowQueue.__dataclass_fields__["iat"].default
+
+
+def build_consts(pa: PaddedArrivals, max_steps: Optional[int] = None
+                 ) -> Dict[str, jnp.ndarray]:
+    """Trace + spec consts for ``simulate_one``. Everything here is a
+    traced array (or traced scalar), NOT a python static: two sweeps
+    over different traces of the same padded shape share one compiled
+    executable."""
+    F = len(pa.fn_ids)
+    n = int(pa.n_events)
+    specs = [pa.fns[fid] for fid in pa.fn_ids]
+
+    # creation-order rank: the scalar plane creates one FlowQueue (and
+    # one memory Region) per function at its FIRST arrival, and every
+    # tie-break uses that creation index ``ins``
+    first = np.full(F, np.inf)
+    for k in range(n):
+        f = int(pa.fn_idx[k])
+        if not np.isfinite(first[f]):
+            first[f] = k
+    # never-arriving flows rank last, stably by index
+    ins = np.argsort(np.argsort(first, kind="stable"), kind="stable")
+
+    # per-flow invocation ids in arrival order: inv_id == merged trace
+    # index (the SimExecutor numbers arrivals in pop order)
+    PF = pa.per_fn_times.shape[1]
+    per_fn_inv = np.zeros((F, PF), dtype=np.int64)
+    fill = np.zeros(F, dtype=np.int64)
+    for k in range(n):
+        f = int(pa.fn_idx[k])
+        per_fn_inv[f, fill[f]] = k
+        fill[f] += 1
+
+    if max_steps is None:
+        # arrivals + completions + drains + timers, with slack; the
+        # step flags ``step_overflow`` if work remains at the cap
+        max_steps = 4 * max(n, 1) + 64 * F + 1024
+
+    return {
+        "times": jnp.asarray(pa.times, dtype=jnp.float64),
+        "fn_idx": jnp.asarray(pa.fn_idx, dtype=jnp.int32),
+        "per_fn_times": jnp.asarray(pa.per_fn_times, dtype=jnp.float64),
+        "per_fn_inv": jnp.asarray(per_fn_inv, dtype=jnp.int32),
+        "n_events": jnp.asarray(n, dtype=jnp.int32),
+        "ins": jnp.asarray(ins, dtype=jnp.int32),
+        "order": jnp.asarray(np.argsort(ins, kind="stable"),
+                             dtype=jnp.int32),
+        "warm_time": jnp.asarray([s.warm_time for s in specs],
+                                 dtype=jnp.float64),
+        "cold_init": jnp.asarray([s.cold_init for s in specs],
+                                 dtype=jnp.float64),
+        "mem_bytes": jnp.asarray([float(s.mem_bytes) for s in specs],
+                                 dtype=jnp.float64),
+        "demand": jnp.asarray([s.demand for s in specs],
+                              dtype=jnp.float64),
+        "max_steps": jnp.asarray(int(max_steps), dtype=jnp.int32),
+        # runtime-opaque 0 for the _round1 FMA-contraction barrier:
+        # being a traced argument, no compiler pass can prove it zero
+        "zero_bits": jnp.asarray(0, dtype=jnp.int64),
+    }
+
+
+def make_params(F: int, *, family: int = FAM_MQFQ, T: float = 10.0,
+                alpha: float = 2.0, sticky: bool = True,
+                vt_by_service: bool = True, deficit_vt: bool = False,
+                d: int = 2, pool_size: int = 32,
+                capacity_bytes: float = 16 * 2**30,
+                h2d_bw: float = 100 * 2**30, beta: float = 0.7,
+                fairness_window: float = 30.0, seed: int = 0,
+                weights=None) -> Dict[str, jnp.ndarray]:
+    """One config point (defaults mirror ``ServerConfig`` +
+    ``MQFQSticky``). Stack several with ``sweep.stack_params`` to build
+    the vmapped config axis."""
+    if weights is None:
+        weights = np.ones(F)
+    # host (numpy) values on purpose: grids build hundreds of points
+    # and ``sweep.stack_params`` stacks them host-side in one shot — a
+    # device array per knob per point was ~100ms of pure dispatch
+    # overhead per sweep
+    return {
+        "family": np.asarray(family, dtype=np.int32),
+        "T": np.asarray(T, dtype=np.float64),
+        "alpha": np.asarray(alpha, dtype=np.float64),
+        "sticky": np.asarray(bool(sticky)),
+        "vt_by_service": np.asarray(bool(vt_by_service)),
+        "deficit": np.asarray(bool(deficit_vt)),
+        "d": np.asarray(int(d), dtype=np.int32),
+        "pool_size": np.asarray(int(pool_size), dtype=np.int32),
+        "capacity": np.asarray(float(capacity_bytes), dtype=np.float64),
+        "h2d_bw": np.asarray(float(h2d_bw), dtype=np.float64),
+        "beta": np.asarray(beta, dtype=np.float64),
+        "window": np.asarray(fairness_window, dtype=np.float64),
+        "weights": np.asarray(weights, dtype=np.float64),
+        # plain-MQFQ candidate draw: a splitmix64 counter stream (a
+        # threefry draw per dispatch attempt was measurable in the hot
+        # loop; the scalar plane's Mersenne stream was never matched
+        # bit-for-bit anyway, only distributionally)
+        "seed": np.asarray(int(seed), dtype=np.uint64),
+    }
+
+
+def init_state(F: int, NE: int, S: int, C: int, A: int
+               ) -> Dict[str, jnp.ndarray]:
+    """Fresh simulator state for one config. ``S`` bounds in-flight
+    completion slots (>= max D in the sweep), ``C`` bounds warm-pool
+    container slots (>= max pool_size + max D + 1: the scalar pool only
+    evicts *idle* containers, so totals can exceed pool_size by the
+    in-flight count), ``A`` bounds the armed-timer stack (strictly
+    decreasing, <= one live timer per flow)."""
+    f64 = jnp.float64
+    i32 = jnp.int32
+    zf = jnp.zeros(F, f64)
+    zi = jnp.zeros(F, i32)
+    zb = jnp.zeros(F, bool)
+    return {
+        # flow queues
+        "vt": zf, "tau": jnp.full(F, TAU0, f64), "tau_n": zi,
+        "iat": jnp.full(F, IAT0, f64), "has_arr": zb,
+        "last_arrival": zf, "last_exec": zf,
+        "qstate": jnp.full(F, INACTIVE, i32), "created": zb,
+        "n_arr": zi, "n_disp": zi, "in_flight": zi,
+        "gvt": jnp.asarray(0.0, f64),
+        # device memory manager (one device)
+        "region_exists": zb, "resident": zb,
+        "upload_eta": jnp.full(F, -1.0, f64), "evictable": zb,
+        "r_last_use": zf,
+        "mem_used": jnp.asarray(0.0, f64),
+        "bytes_uploaded": jnp.asarray(0.0, f64),
+        "bytes_evicted": jnp.asarray(0.0, f64),
+        "prefetch_count": jnp.asarray(0, i32),
+        # warm pool
+        "c_exists": jnp.zeros(C, bool),
+        "c_fn": jnp.full(C, -1, i32),
+        "c_idle_seq": jnp.full(C, -1, i32),
+        "c_last_use": jnp.zeros(C, f64),
+        "fn_stamp": jnp.full(F, -1, i32),
+        "stamp_ctr": jnp.asarray(0, i32),
+        "rel_seq": jnp.asarray(0, i32),
+        "pool_total": jnp.asarray(0, i32),
+        "cold": jnp.asarray(0, i32), "warm": jnp.asarray(0, i32),
+        "host_warm": jnp.asarray(0, i32),
+        "pool_evictions": jnp.asarray(0, i32),
+        # device tokens / interference
+        "outstanding": jnp.asarray(0, i32),
+        "running_bytes": jnp.asarray(0.0, f64),
+        "run_cnt": zi,
+        "demand_sum": jnp.asarray(0.0, f64),
+        "busy_time": jnp.asarray(0.0, f64),
+        # in-flight completion slots
+        "s_active": jnp.zeros(S, bool),
+        "s_time": jnp.full(S, jnp.inf, f64),
+        "s_seq": jnp.zeros(S, i32),
+        "s_flow": jnp.zeros(S, i32),
+        "s_inv": jnp.zeros(S, i32),
+        "s_service": jnp.zeros(S, f64),
+        "s_charged": jnp.zeros(S, f64),
+        "s_container": jnp.zeros(S, i32),
+        # per-invocation output fields staged in the slot until the
+        # completion event writes the (NE, 6) record in one scatter
+        "s_disp_t": jnp.zeros(S, f64),
+        "s_overhead": jnp.zeros(S, f64),
+        "s_stype": jnp.zeros(S, i32),
+        # fairness tracker
+        "fsvc": zf, "ftau": zf, "ftau_set": zb,
+        "disq": zb, "backlogged": zb,
+        "f_t0": jnp.asarray(0.0, f64),
+        "n_windows": jnp.asarray(0, i32),
+        "gap_max": jnp.asarray(0.0, f64),
+        "gap_sum": jnp.asarray(0.0, f64),
+        "bound_sum": jnp.asarray(0.0, f64),
+        # executor bookkeeping
+        "arr_ptr": jnp.asarray(0, i32),
+        "armed": jnp.full(A, jnp.inf, f64),
+        "n_armed": jnp.asarray(0, i32),
+        "armed_ovf": jnp.asarray(False),
+        "now": jnp.asarray(0.0, f64),
+        "events": jnp.asarray(0, i32),
+        "steps": jnp.asarray(0, i32),
+        "step_overflow": jnp.asarray(False),
+        "util_integral": jnp.asarray(0.0, f64),
+        "last_t": jnp.asarray(0.0, f64),
+        "last_u": jnp.asarray(0.0, f64),
+        "dp_synced": jnp.asarray(False),
+        "decisions": jnp.asarray(0, i32),
+        "dispatch_seq": jnp.asarray(0, i32),
+        # per-invocation outputs (indexed by merged trace position), one
+        # packed (NE, 6) record written per completion: columns are
+        # REC_COLS = (dispatch, completion, service, overhead, start
+        # type, dispatch order). One row scatter instead of six O(NE)
+        # masked writes per dispatch — the O(NE) writes were the single
+        # largest in-loop cost (~360us/step at the fig8 grid's shapes).
+        "o_rec": jnp.tile(
+            jnp.asarray([-1.0, -1.0, 0.0, 0.0, -1.0, -1.0], f64),
+            (NE, 1)),
+    }

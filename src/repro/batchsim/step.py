@@ -1,0 +1,820 @@
+"""One simulated configuration as a jitted ``lax.while_loop``.
+
+``simulate_one(p, c, st)`` replays the padded trace through an exact
+array-program mirror of the scalar fast path (``SimExecutor._run_fast``
+over ``ControlPlane`` with ``sampling="transition"``,
+``batch_dispatch=True``, ``datapath="scalar"``, static D, one device,
+``mem_policy="prefetch_swap"`` with the clean resident sweep): the same
+event ordering (arrival < completion < timer at equal times, completion
+ties by dispatch sequence), the same dispatch pipeline (choose ->
+D-token -> admission -> pop -> VT advance -> state machine + prefetch
+hooks -> warm-pool acquire -> memory acquire -> cold-cost realization),
+the same deferred-transition pass at the top of ``choose`` (TTL
+expiries + throttle releases in creation order), the same fairness
+windows and utilization integral. The differential suite
+(``tests/test_batchsim.py``) holds this mirror to the scalar plane
+per-invocation.
+
+Branchless style: every conditional update is a masked write (``en``
+flags) because under ``vmap`` both sides of a ``cond`` run anyway; the
+inner ``while_loop``s (eviction sweeps, deferred transitions, the
+dispatch drain) run per lane and JAX's batching rule discards body
+results for lanes whose condition already went false.
+
+The shared arithmetic is pinned to the scalar plane's pure hooks:
+``repro.core.index.eligible`` / ``candidate_key`` and
+``repro.core.mqfq.throttled`` / ``ttl_expired``.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+from jax import lax
+
+from repro.batchsim.state import (ACTIVE, COLD, FAM_FCFS, FAM_MQFQ, EMA,
+                                  HOST_WARM, INACTIVE, THROTTLED, WARM)
+
+_INF = jnp.inf
+# int64 sentinel for masked argmin/min over integer keys derived from
+# the float bit view; int32 keys (counts, sequence numbers) use _I32MAX
+_IMAX = (1 << 63) - 1
+_I32MAX = (1 << 31) - 1
+
+
+def _bits(x):
+    """Order-preserving int64 view of a NON-NEGATIVE float64 array (the
+    IEEE-754 bit pattern of x >= 0 is monotone in x, +inf included).
+    Lets a (float-primary, int-tiebreak) lexicographic argmin run as two
+    integer reductions instead of a per-key min cascade — every float
+    key in this module (times, tau estimates) is >= 0."""
+    return lax.bitcast_convert_type(x, jnp.int64)
+
+
+def _round1(c, x):
+    """Force ``x`` to round to its f64 value before its consumer sees
+    it. LLVM contracts a same-function fadd(fmul) into a single-rounding
+    FMA — XLA's CPU pipeline strips OptimizationBarrier, and a select
+    doesn't block the pattern either — while the scalar plane rounds
+    every op. Any product that feeds an add whose result the scalar
+    plane compares exactly (TTL deadlines, the oversubscription
+    stretch, IAT/tau EMAs) goes through this: bitcast to int64, xor
+    with a runtime-opaque zero (a traced const, so neither XLA nor
+    LLVM can fold it), bitcast back. The add's operand is then a
+    bitcast, not an fmul, and the contraction pattern can't fire.
+    Pure elementwise — fuses into the surrounding graph, unlike the
+    one-trip while_loop this replaced (~55% warm-step overhead)."""
+    return lax.bitcast_convert_type(
+        lax.bitcast_convert_type(x, jnp.int64) ^ c["zero_bits"],
+        jnp.float64)
+
+
+def _splitmix(seed, n):
+    """splitmix64 of (seed, n): the plain-MQFQ candidate draw. Cheap
+    counter-based stream — the scalar plane's Mersenne stream was never
+    reproduced bit-for-bit (``rng.choice`` there), only matched
+    distributionally, and a threefry draw per dispatch attempt was a
+    measurable slice of the hot loop."""
+    x = seed * jnp.uint64(0x9E3779B97F4A7C15) + n.astype(jnp.uint64)
+    x = (x + jnp.uint64(0x9E3779B97F4A7C15))
+    x = (x ^ (x >> jnp.uint64(30))) * jnp.uint64(0xBF58476D1CE4E5B9)
+    x = (x ^ (x >> jnp.uint64(27))) * jnp.uint64(0x94D049BB133111EB)
+    return x ^ (x >> jnp.uint64(31))
+
+
+def _i(b):
+    """bool -> 0/1 (weak-typed int) for counter arithmetic."""
+    return jnp.where(b, 1, 0)
+
+
+def _set(arr, i, val, en=True):
+    """``arr.at[i].set(where(en, val, arr[i]))`` as a one-hot masked
+    write. Under vmap a per-lane-index scatter costs ~10x an elementwise
+    op on XLA:CPU (measured ~11us vs ~0.4us at the sweep's shapes); the
+    one-hot form fuses into the surrounding elementwise graph and is the
+    difference between the batch plane beating the scalar loop and
+    losing to it."""
+    hot = jnp.arange(arr.shape[0]) == i
+    if en is not True:
+        hot = hot & en
+    return jnp.where(hot, val, arr)
+
+
+def _add(arr, i, val, en=True):
+    """``arr.at[i].add(where(en, val, 0))`` as a one-hot masked add —
+    same scatter-avoidance as ``_set``."""
+    hot = jnp.arange(arr.shape[0]) == i
+    if en is not True:
+        hot = hot & en
+    return arr + jnp.where(hot, val, jnp.zeros((), arr.dtype))
+
+
+def _lex_argmin(mask, *keys):
+    """Index of the lexicographic minimum of ``keys`` restricted to
+    ``mask`` — the array mirror of the scalar plane's stable sorts /
+    heap orders. Returns 0 when the mask is empty (callers guard with
+    ``mask.any()``)."""
+    m = mask
+    for k in keys:
+        if jnp.issubdtype(k.dtype, jnp.floating):
+            big = jnp.asarray(jnp.inf, k.dtype)
+        else:
+            big = jnp.asarray(jnp.iinfo(k.dtype).max, k.dtype)
+        kk = jnp.where(m, k, big)
+        m = m & (kk == kk.min())
+    # int32 so the pick can be stored in the int32 index fields without
+    # promoting them (argmax defaults to int64 under x64)
+    return jnp.argmax(m).astype(jnp.int32)
+
+
+def _upd(st, **kw):
+    st = dict(st)
+    st.update(kw)
+    return st
+
+
+# -- memory manager (prefetch_swap, clean resident sweep) -------------------
+def _evict_lru(p, c, st, need, now, protect, en):
+    """``MemoryManager._evict_lru``: evict least-recently-used regions
+    (evictable pool first, then clean still-resident victims) until
+    ``need`` bytes fit; ``protect`` is never a victim. The while carry
+    is restricted to the five fields the sweep touches (not the whole
+    state dict) to keep the loop's per-iteration shuffling cheap; the
+    evictable pool is a subset of the resident set, so the "any victim
+    left" test is one reduction."""
+    F = c["ins"].shape[0]
+    notp = jnp.arange(F) != protect
+
+    def cond(carry):
+        resident, _eta, _ev, mem_used, _by = carry
+        free = p["capacity"] - mem_used
+        return en & (free < need) & (resident & notp).any()
+
+    def body(carry):
+        resident, upload_eta, evictable, mem_used, bytes_evicted = carry
+        ev = resident & evictable & notp
+        res = resident & notp
+        mask = jnp.where(ev.any(), ev, res)
+        v = _lex_argmin(mask, st["r_last_use"], c["ins"])
+        sz = c["mem_bytes"][v]
+        return (_set(resident, v, False), _set(upload_eta, v, -1.0),
+                _set(evictable, v, False), mem_used - sz,
+                bytes_evicted + sz)
+
+    resident, upload_eta, evictable, mem_used, bytes_evicted = \
+        lax.while_loop(cond, body,
+                       (st["resident"], st["upload_eta"], st["evictable"],
+                        st["mem_used"], st["bytes_evicted"]))
+    st = _upd(st, resident=resident, upload_eta=upload_eta,
+              evictable=evictable, mem_used=mem_used,
+              bytes_evicted=bytes_evicted)
+    ok = (p["capacity"] - st["mem_used"]) >= need
+    return st, ok
+
+
+def _mem_on_queue_active(p, c, st, f, now, en):
+    """Anticipatory prefetch on Active entry: start the H2D upload now
+    unless the region is already resident or mid-upload."""
+    sz = c["mem_bytes"][f]
+    st = _upd(
+        st,
+        region_exists=_set(st["region_exists"], f, True, en),
+        evictable=_set(st["evictable"], f, False, en))
+    skip = st["resident"][f] | (st["upload_eta"][f] > now)
+    do = en & ~skip
+    st, ok = _evict_lru(p, c, st, sz, now, f, do)
+    did = do & ok
+    return _upd(
+        st,
+        upload_eta=_set(st["upload_eta"], f, now + sz / p["h2d_bw"], did),
+        resident=_set(st["resident"], f, True, did),
+        mem_used=st["mem_used"] + jnp.where(did, sz, 0.0),
+        prefetch_count=st["prefetch_count"] + _i(did),
+        bytes_uploaded=st["bytes_uploaded"] + jnp.where(did, sz, 0.0))
+
+
+def _mem_on_queue_idle(p, c, st, f, now, en):
+    """Idle exit: mark evictable; prefetch_swap frees completed uploads
+    immediately."""
+    en = en & st["region_exists"][f]
+    sz = c["mem_bytes"][f]
+    st = _upd(st, evictable=_set(st["evictable"], f, True, en))
+    do = en & st["resident"][f] & (st["upload_eta"][f] <= now)
+    return _upd(
+        st,
+        resident=_set(st["resident"], f, False, do),
+        upload_eta=_set(st["upload_eta"], f, -1.0, do),
+        mem_used=st["mem_used"] - jnp.where(do, sz, 0.0),
+        bytes_evicted=st["bytes_evicted"] + jnp.where(do, sz, 0.0))
+
+
+def _mem_acquire(p, c, st, f, now, en):
+    """``MemoryManager.acquire`` at dispatch: returns (st, ready) where
+    ready is when the weights are on-device (upload ETA on a miss)."""
+    sz = c["mem_bytes"][f]
+    st = _upd(
+        st,
+        region_exists=_set(st["region_exists"], f, True, en),
+        evictable=_set(st["evictable"], f, False, en),
+        r_last_use=_set(st["r_last_use"], f, now, en))
+    hit = st["resident"][f]
+    # scalar plane starts the upload even when reclaim cannot fit it
+    # (result ignored); mirror that by not gating on ok
+    st, _ok = _evict_lru(p, c, st, sz, now, f, en & ~hit)
+    miss = en & ~hit
+    eta_new = now + sz / p["h2d_bw"]
+    ready = jnp.where(hit, jnp.maximum(st["upload_eta"][f], now), eta_new)
+    st = _upd(
+        st,
+        resident=_set(st["resident"], f, True, miss),
+        upload_eta=_set(st["upload_eta"], f, eta_new, miss),
+        mem_used=st["mem_used"] + jnp.where(miss, sz, 0.0),
+        bytes_uploaded=st["bytes_uploaded"] + jnp.where(miss, sz, 0.0))
+    return st, ready
+
+
+# -- warm pool ---------------------------------------------------------------
+def _pool_acquire(p, c, st, f, now, dev_res, en):
+    """``WarmPool.acquire``: most-recently-released idle container of
+    this fn (warm / host_warm by device residency), else evict global
+    LRU idle containers while at capacity and create cold."""
+    idle = st["c_exists"] & (st["c_fn"] == f) & (st["c_idle_seq"] >= 0)
+    # most-recently-released first, release order on ties: max last_use
+    # via the order-preserving bit view (sentinel -1 < any bit pattern
+    # of a time >= 0, so a finite max doubles as the has-idle test)
+    bt = _bits(st["c_last_use"])
+    mbt = jnp.max(jnp.where(idle, bt, -1))
+    has_idle = mbt >= 0
+    ci = jnp.argmin(jnp.where(idle & (bt == mbt), st["c_idle_seq"],
+                              _I32MAX)).astype(jnp.int32)
+    take = en & has_idle
+    st = _upd(
+        st,
+        c_idle_seq=_set(st["c_idle_seq"], ci, -1, take),
+        c_last_use=_set(st["c_last_use"], ci, now, take),
+        warm=st["warm"] + _i(take & dev_res),
+        host_warm=st["host_warm"] + _i(take & ~dev_res))
+
+    mk = en & ~has_idle
+
+    # the eviction sweep only mutates four fields; carrying the whole
+    # state dict through the while made every trip shuffle ~70 buffers
+    def cond(carry):
+        c_exists, c_idle_seq, pool_total, _evc = carry
+        anyidle = (c_exists & (c_idle_seq >= 0)).any()
+        return mk & (pool_total >= p["pool_size"]) & anyidle
+
+    def body(carry):
+        c_exists, c_idle_seq, pool_total, evc = carry
+        gi = c_exists & (c_idle_seq >= 0)
+        stamps = st["fn_stamp"][st["c_fn"]]
+        v = _lex_argmin(gi, st["c_last_use"], stamps, c_idle_seq)
+        return (_set(c_exists, v, False), _set(c_idle_seq, v, -1),
+                pool_total - 1, evc + 1)
+
+    c_exists, c_idle_seq, pool_total, evc = lax.while_loop(
+        cond, body, (st["c_exists"], st["c_idle_seq"],
+                     st["pool_total"], st["pool_evictions"]))
+    st = _upd(st, c_exists=c_exists, c_idle_seq=c_idle_seq,
+              pool_total=pool_total, pool_evictions=evc)
+    free = jnp.argmax(~st["c_exists"]).astype(jnp.int32)
+    st = _upd(
+        st,
+        c_exists=_set(st["c_exists"], free, True, mk),
+        c_fn=_set(st["c_fn"], free, f, mk),
+        c_idle_seq=_set(st["c_idle_seq"], free, -1, mk),
+        c_last_use=_set(st["c_last_use"], free, now, mk),
+        pool_total=st["pool_total"] + _i(mk),
+        cold=st["cold"] + _i(mk))
+    ctr = jnp.where(has_idle, ci, free)
+    stype = jnp.where(has_idle, jnp.where(dev_res, WARM, HOST_WARM), COLD)
+    return st, ctr, stype
+
+
+def _pool_release(p, c, st, ci, now, en):
+    """``WarmPool.release``: back to idle; a fn's eviction stamp is
+    assigned at its FIRST release (monotone counter), idle order by the
+    global release sequence."""
+    f = st["c_fn"][ci]
+    need_stamp = en & (st["fn_stamp"][f] < 0)
+    return _upd(
+        st,
+        c_last_use=_set(st["c_last_use"], ci, now, en),
+        fn_stamp=_set(st["fn_stamp"], f, st["stamp_ctr"], need_stamp),
+        stamp_ctr=st["stamp_ctr"] + _i(need_stamp),
+        c_idle_seq=_set(st["c_idle_seq"], ci, st["rel_seq"], en),
+        rel_seq=st["rel_seq"] + _i(en))
+
+
+# -- MQFQ state machine ------------------------------------------------------
+# every state field _update_state (and the memory hooks it fires) can
+# write — the deferred pass in _choose carries exactly this subset
+_UPDATE_KEYS = ("qstate", "region_exists", "resident", "upload_eta",
+                "evictable", "mem_used", "prefetch_count",
+                "bytes_uploaded", "bytes_evicted")
+
+
+def _update_state(p, c, st, f, now, en):
+    """``MQFQSticky._update_state`` + the anticipatory memory hooks the
+    control plane registers (fired only on actual state changes)."""
+    pending = (st["n_arr"][f] - st["n_disp"][f]) > 0
+    idle = ~pending & (st["in_flight"][f] == 0)
+    vt = st["vt"][f]
+    g = st["gvt"]
+    thr = (vt >= g + p["T"]) & (vt > g)       # core.mqfq.throttled
+    old = st["qstate"][f]
+    expired = (old != INACTIVE) & (
+        now - st["last_exec"][f] >= p["alpha"] * st["iat"][f])
+    busy_new = jnp.where(thr, THROTTLED, ACTIVE)
+    idle_new = jnp.where(expired | (old == INACTIVE), INACTIVE, busy_new)
+    new = jnp.where(idle, idle_new, busy_new)
+    st = _upd(st, qstate=_set(st["qstate"], f, new, en))
+    changed = en & (old != new)
+    st = _mem_on_queue_active(p, c, st, f, now, changed & (new == ACTIVE))
+    st = _mem_on_queue_idle(p, c, st, f, now, changed & (new != ACTIVE))
+    return st
+
+
+def _refresh_gvt(p, st, en):
+    """Global_VT floor: monotone max with the min VT over queues with
+    pending work (a finite min implies a pending queue exists — one
+    reduction, not two)."""
+    pend = (st["n_arr"] - st["n_disp"]) > 0
+    mp = jnp.min(jnp.where(pend, st["vt"], _INF))
+    lift = en & (mp < _INF) & (mp > st["gvt"])
+    return _upd(st, gvt=jnp.where(lift, mp, st["gvt"]))
+
+
+# -- choose / dispatch -------------------------------------------------------
+def _choose(p, c, st, now, en):
+    """``MQFQSticky.choose`` (and the FCFS/SJF baselines): deferred
+    transitions, Global_VT refresh, then the policy's argmin. Returns
+    (st, found, flow). ``en`` gates the whole call (a disabled lane
+    must not advance the decisions counter or run transitions) — the
+    drain's first attempt runs outside the while loop, so lane masking
+    cannot ride on the loop's carry select there."""
+    F = c["ins"].shape[0]
+    is_mqfq = p["family"] == FAM_MQFQ
+    st = _upd(st, decisions=st["decisions"] + _i(is_mqfq & en))
+    st = _refresh_gvt(p, st, is_mqfq & en)
+
+    # deferred pass: TTL expiries + throttle releases, creation order
+    pend = (st["n_arr"] - st["n_disp"]) > 0
+    idle = ~pend & (st["in_flight"] == 0)
+    # alpha*iat rounds before the add (see _round1) — the deadline must
+    # be bitwise the scalar expiry-heap key, or an armed timer lands an
+    # ulp off the true lapse instant and the recheck in _update_state
+    # rejects it forever
+    expiry = idle & (st["qstate"] != INACTIVE) & (
+        st["last_exec"] + _round1(c, p["alpha"] * st["iat"]) <= now)
+    g = st["gvt"]
+    elig = (st["vt"] < g + p["T"]) | (st["vt"] <= g)  # core.index.eligible
+    unthr = (st["qstate"] == THROTTLED) & elig
+    due = (expiry | unthr) & is_mqfq & en
+
+    # one trip per due flow, in creation order; the carry is restricted
+    # to the fields ``_update_state`` can write (everything else it
+    # reads — n_arr/n_disp, in_flight, vt, gvt, last_exec, iat,
+    # r_last_use — is frozen for the duration of the pass)
+    def dcond(carry):
+        _, rem = carry
+        return rem.any()
+
+    def dbody(carry):
+        sub, rem = carry
+        f = _lex_argmin(rem, c["ins"])
+        stt = _update_state(p, c, {**st, **sub}, f, now,
+                            jnp.asarray(True))
+        return {k: stt[k] for k in _UPDATE_KEYS}, _set(rem, f, False)
+
+    sub, _ = lax.while_loop(dcond, dbody,
+                            ({k: st[k] for k in _UPDATE_KEYS}, due))
+    st = _upd(st, **sub)
+
+    qlen = st["n_arr"] - st["n_disp"]
+    pend = qlen > 0
+    cand = jnp.where(is_mqfq, (st["qstate"] == ACTIVE) & pend, pend) & en
+
+    # One two-phase argmin serves every family — a per-family int64
+    # primary key, then an exact integer tie-break (distinct per flow,
+    # so the pick is deterministic):
+    #   sticky:  core.index.candidate_key — (-len, ins) at D==1,
+    #            (in_flight, -len, ins) at D!=1; device_parallelism
+    #            syncs to D at the first utilization sample (scalar
+    #            ``_dp_synced``), 1 before
+    #   FCFS:    earliest head arrival (bit view), dict-order ties
+    #   SJF:     smallest tau (bit view), dict-order ties
+    eff_dp = jnp.where(st["dp_synced"], p["d"], 1)
+    infl = jnp.where(eff_dp == 1, jnp.zeros_like(st["in_flight"]),
+                     st["in_flight"])
+    PF = c["per_fn_times"].shape[1]
+    head = c["per_fn_times"][jnp.arange(F),
+                             jnp.clip(st["n_disp"], 0, PF - 1)]
+    k1 = jnp.where(
+        is_mqfq, infl,
+        _bits(jnp.where(p["family"] == FAM_FCFS, head, st["tau"])))
+    m1 = jnp.min(jnp.where(cand, k1, _IMAX))
+    found = m1 < _IMAX
+    NE = c["times"].shape[0]
+    k2 = jnp.where(is_mqfq, (NE + 1 - qlen) * F + c["ins"], c["ins"])
+    f_det = jnp.argmin(jnp.where(cand & (k1 == m1), k2,
+                                 _I32MAX)).astype(jnp.int32)
+    # plain MQFQ: a uniform choice over candidates in creation order —
+    # statistically equivalent stream, not the scalar Mersenne stream
+    cs = jnp.cumsum(jnp.where(cand[c["order"]], 1, 0).astype(jnp.int32))
+    cnt = cs[F - 1]
+    rnd = _splitmix(p["seed"], st["decisions"])
+    r = (rnd % jnp.maximum(cnt, 1).astype(jnp.uint64)).astype(jnp.int32)
+    pos = jnp.argmax(cs == r + 1)
+    f_rand = c["order"][pos]
+    f = jnp.where(is_mqfq & ~p["sticky"], f_rand, f_det)
+    return st, found, f
+
+
+def _try_choose(p, c, st, now, en):
+    """The cheap half of ``ControlPlane.dispatch_once``: run the
+    policy's choose (which mutates state — deferred transitions,
+    Global_VT, the decisions counter — even on a failing attempt), then
+    the D-token + admission check. Returns (st, ok, flow). The drain
+    loop commits only when ``ok`` — every drain's final attempt fails
+    by construction, and paying the full warm-pool/memory/slot commit
+    for a masked no-op on that attempt was ~2/5 of the whole sweep."""
+    st, found, f = _choose(p, c, st, now, en)
+    ok = (found & (st["outstanding"] < p["d"])
+          & (st["running_bytes"] + c["mem_bytes"][f] <= p["capacity"]))
+    return st, ok, f
+
+
+def _commit_dispatch(p, c, st, now, f):
+    """The expensive half: pop, VT advance, state hooks, warm-pool +
+    memory acquire, cold-cost realization, completion slot fill. Only
+    reached for a checked ``ok`` attempt — lane masking rides on the
+    drain while's carry select, so writes here are unconditional."""
+    is_mqfq = p["family"] == FAM_MQFQ
+    T = jnp.asarray(True)
+    sz = c["mem_bytes"][f]
+    PF = c["per_fn_times"].shape[1]
+    j = jnp.clip(st["n_disp"][f], 0, PF - 1)
+    inv = c["per_fn_inv"][f, j]
+
+    # pop + policy.on_dispatch (VT advance by tau/weight; the
+    # vt_by_service=False ablation charges a unit tau)
+    tau_eff = jnp.where(is_mqfq & ~p["vt_by_service"], 1.0, st["tau"][f])
+    st = _upd(
+        st,
+        n_disp=_add(st["n_disp"], f, 1),
+        vt=_add(st["vt"], f, tau_eff / p["weights"][f]),
+        in_flight=_add(st["in_flight"], f, 1),
+        last_exec=_set(st["last_exec"], f, now))
+    st = _refresh_gvt(p, st, is_mqfq)
+    st = _update_state(p, c, st, f, now, is_mqfq)
+
+    # D-token, then residency snapshot *after* the state hooks (a
+    # dispatch that throttles its own flow can evict its region first)
+    st = _upd(st, outstanding=st["outstanding"] + 1)
+    dev_res = (st["region_exists"][f] & st["resident"][f]
+               & (st["upload_eta"][f] <= now))
+    st, ci, stype = _pool_acquire(p, c, st, f, now, dev_res, T)
+    st, ready = _mem_acquire(p, c, st, f, now, T)
+
+    # device accounting (demand includes this invocation)
+    first = st["run_cnt"][f] == 0
+    st = _upd(
+        st,
+        running_bytes=st["running_bytes"] + jnp.where(first, sz, 0.0),
+        run_cnt=_add(st["run_cnt"], f, 1),
+        demand_sum=st["demand_sum"] + c["demand"][f])
+
+    # realization: cold-cost model + oversubscription stretch. The
+    # stretch's demand sum must be BITWISE the scalar plane's, which
+    # sums per-invocation demands in dispatch order on every read (a
+    # dict keyed by inv_id) — the incremental ``demand_sum`` accumulator
+    # drifts by ulps on non-dyadic demands, and at alpha=1 the TTL
+    # deadline lands exactly on the next arrival, where one ulp of
+    # service time flips a warm start to host_warm. The in-flight set
+    # is exactly the active slots, so re-sum them in dispatch-seq order
+    # (S is tiny — max D over the grid — and the loop unrolls at trace
+    # time), with this invocation's demand appended last as the scalar
+    # inserts it.
+    overhead = (ready - now
+                + jnp.where(stype == COLD, c["cold_init"][f], 0.0))
+    dvals = jnp.where(st["s_active"], c["demand"][st["s_flow"]], 0.0)
+    dvals = dvals[jnp.argsort(jnp.where(st["s_active"], st["s_seq"],
+                                        _I32MAX))]
+    dsum = jnp.asarray(0.0, dtype=dvals.dtype)
+    for k in range(dvals.shape[0]):
+        dsum = dsum + dvals[k]
+    dsum = dsum + c["demand"][f]
+    # beta * excess must round BEFORE the ``1.0 +`` add (see _round1)
+    stretch = 1.0 + _round1(c, p["beta"] * jnp.maximum(0.0, dsum - 1.0))
+    service = c["warm_time"][f] * stretch
+    completion = now + overhead + service
+
+    # the per-invocation output fields ride in the slot until the
+    # completion event writes the (NE, 6) record in one scatter — six
+    # O(NE) masked writes per dispatch attempt were the single largest
+    # in-loop cost
+    si = jnp.argmax(~st["s_active"])
+    seq = st["dispatch_seq"]
+    return _upd(
+        st,
+        busy_time=st["busy_time"] + service,
+        s_active=_set(st["s_active"], si, True),
+        s_time=_set(st["s_time"], si, completion),
+        s_seq=_set(st["s_seq"], si, seq),
+        s_flow=_set(st["s_flow"], si, f),
+        s_inv=_set(st["s_inv"], si, inv),
+        s_service=_set(st["s_service"], si, service),
+        s_charged=_set(st["s_charged"], si, tau_eff),
+        s_container=_set(st["s_container"], si, ci),
+        s_disp_t=_set(st["s_disp_t"], si, now),
+        s_overhead=_set(st["s_overhead"], si, overhead),
+        s_stype=_set(st["s_stype"], si, stype),
+        dispatch_seq=seq + 1)
+
+
+# -- event handlers ----------------------------------------------------------
+def _handle_arrival(p, c, st, now, en):
+    is_mqfq = p["family"] == FAM_MQFQ
+    NE = c["times"].shape[0]
+    f = c["fn_idx"][jnp.clip(st["arr_ptr"], 0, NE - 1)]
+    # FlowQueue.arrive: IAT estimate (EMA only once service observed),
+    # SFQ start-tag lift for non-backlogged queues
+    gap = jnp.maximum(now - st["last_arrival"][f], 1e-9)
+    # both products must round before the add (see _round1): a fused
+    # (1-EMA)*iat + EMA*gap drifts iat an ulp off the scalar plane, and
+    # iat feeds the anticipatory TTL deadline
+    new_iat = jnp.where(st["tau_n"][f] > 0,
+                        _round1(c, (1 - EMA) * st["iat"][f])
+                        + _round1(c, EMA * gap), gap)
+    upd_iat = en & st["has_arr"][f]
+    not_backlogged = (((st["n_arr"][f] - st["n_disp"][f]) == 0)
+                      & (st["in_flight"][f] == 0))
+    g_eff = jnp.where(is_mqfq, st["gvt"], 0.0)
+    st = _upd(
+        st,
+        iat=_set(st["iat"], f, new_iat, upd_iat),
+        has_arr=_set(st["has_arr"], f, True, en),
+        last_arrival=_set(st["last_arrival"], f, now, en),
+        vt=_set(st["vt"], f, jnp.maximum(st["vt"][f], g_eff),
+                en & not_backlogged),
+        n_arr=_add(st["n_arr"], f, 1, en),
+        created=_set(st["created"], f, True, en))
+    # the MQFQ state-machine update runs once per event, merged with the
+    # completion handler's, in _event_step (arrival and completion are
+    # mutually exclusive and everything written between here and there
+    # is disjoint from what _update_state reads)
+    st = _upd(
+        st,
+        backlogged=_set(st["backlogged"], f, True, en),
+        arr_ptr=st["arr_ptr"] + _i(en))
+    # non-anticipatory baselines: residency driven by queue occupancy
+    return _mem_on_queue_active(p, c, st, f, now, en & ~is_mqfq)
+
+
+def _handle_complete(p, c, st, now, en, si):
+    """``si`` — the completing slot (earliest s_time, dispatch order on
+    ties) — is picked once in ``_event_step`` alongside the t_cmp min
+    it needs anyway."""
+    is_mqfq = p["family"] == FAM_MQFQ
+    f = st["s_flow"][si]
+    service = st["s_service"][si]
+    charged = st["s_charged"][si]
+    ci = st["s_container"][si]
+    sz = c["mem_bytes"][f]
+    # note_complete + token release
+    new_cnt = st["run_cnt"][f] - 1
+    lastc = en & (new_cnt <= 0)
+    st = _upd(
+        st,
+        run_cnt=_add(st["run_cnt"], f, -1, en),
+        running_bytes=st["running_bytes"] - jnp.where(lastc, sz, 0.0),
+        demand_sum=st["demand_sum"]
+        - jnp.where(en, c["demand"][f], 0.0),
+        outstanding=st["outstanding"] - _i(en))
+    st = _pool_release(p, c, st, ci, now, en)
+    # FlowQueue.on_complete: deficit settle + tau EMA
+    new_tau_n = st["tau_n"][f] + 1
+    new_tau = jnp.where(new_tau_n == 1, service,
+                        _round1(c, (1 - EMA) * st["tau"][f])
+                        + _round1(c, EMA * service))
+    st = _upd(
+        st,
+        in_flight=_add(st["in_flight"], f, -1, en),
+        last_exec=_set(st["last_exec"], f, now, en),
+        vt=_add(st["vt"], f, (service - charged) / p["weights"][f],
+                en & p["deficit"]),
+        tau_n=_add(st["tau_n"], f, 1, en),
+        tau=_set(st["tau"], f, new_tau, en))
+    # MQFQ state-machine update deferred to _event_step's merged call
+    # fairness accounting (tau recorded post-EMA), backlog transition
+    nb = (((st["n_arr"][f] - st["n_disp"][f]) == 0)
+          & (st["in_flight"][f] == 0))
+    gone = en & nb
+    st = _upd(
+        st,
+        fsvc=_add(st["fsvc"], f, service, en),
+        ftau=_set(st["ftau"], f, st["tau"][f], en),
+        ftau_set=_set(st["ftau_set"], f, True, en),
+        backlogged=_set(st["backlogged"], f, False, gone),
+        disq=_set(st["disq"], f, True, gone))
+    st = _mem_on_queue_idle(p, c, st, f, now, gone & ~is_mqfq)
+    # flush the invocation's output record: one row scatter into
+    # (NE, 6). Disabled lanes redirect to the out-of-bounds row and the
+    # drop-mode scatter discards them — the record array is then used
+    # exactly once per step, so XLA updates the while carry in place
+    # (a gather + masked write double-buffered the ~MB array every
+    # outer iteration, a measurable slice of the whole sweep)
+    inv = jnp.where(en, st["s_inv"][si], st["o_rec"].shape[0])
+    row = jnp.stack([st["s_disp_t"][si], now, service,
+                     st["s_overhead"][si],
+                     st["s_stype"][si].astype(jnp.float64),
+                     st["s_seq"][si].astype(jnp.float64)])
+    return _upd(
+        st,
+        o_rec=st["o_rec"].at[inv].set(row, mode="drop"),
+        s_active=_set(st["s_active"], si, False, en),
+        s_time=_set(st["s_time"], si, _INF, en))
+
+
+def _sample(p, c, st, now, live):
+    """``ControlPlane._sample_transition``: device_parallelism sync,
+    utilization time-integral, fairness window roll. ``live`` gates the
+    window roll so finished lanes (idling at a frozen ``now`` inside a
+    chunked step) cannot re-roll a zero-length window."""
+    util = jnp.minimum(1.0, st["demand_sum"])
+    st = _upd(
+        st,
+        dp_synced=st["dp_synced"] | live,
+        util_integral=st["util_integral"]
+        + st["last_u"] * (now - st["last_t"]),
+        last_t=now, last_u=jnp.where(live, util, st["last_u"]))
+    due = live & ((now - st["f_t0"]) >= p["window"])
+    flows = st["backlogged"] & ~st["disq"]
+    rec = due & (flows.sum() >= 2)
+    # four masked reductions (max x == -min -x exactly, including the
+    # empty-window infinities); stacking them first materialized a
+    # (4, F) temp per step for no fewer bytes
+    taus = jnp.where(st["ftau_set"], st["ftau"], 0.0)
+    s_lo = jnp.min(jnp.where(flows, st["fsvc"], _INF))
+    s_hi = -jnp.min(jnp.where(flows, -st["fsvc"], _INF))
+    t_lo = jnp.min(jnp.where(flows, taus, _INF))
+    t_hi = -jnp.min(jnp.where(flows, -taus, _INF))
+    T_pol = jnp.where(p["family"] == FAM_MQFQ, p["T"], 0.0)
+    gap = s_hi - s_lo
+    bound = (p["d"] - 1) * (2.0 * T_pol + (t_hi - t_lo))
+    return _upd(
+        st,
+        n_windows=st["n_windows"] + _i(rec),
+        gap_sum=st["gap_sum"] + jnp.where(rec, gap, 0.0),
+        gap_max=jnp.where(rec, jnp.maximum(st["gap_max"], gap),
+                          st["gap_max"]),
+        bound_sum=st["bound_sum"] + jnp.where(rec, bound, 0.0),
+        f_t0=jnp.where(due, now, st["f_t0"]),
+        fsvc=jnp.where(due, jnp.zeros_like(st["fsvc"]), st["fsvc"]),
+        disq=jnp.where(due, st["created"] & ~st["backlogged"],
+                       st["disq"]))
+
+
+def _arm_timer(p, c, st, now, live):
+    """Arm the next anticipatory-TTL lapse iff strictly earlier than the
+    current stack top (the executor's strictly-decreasing timer
+    stack)."""
+    A = st["armed"].shape[0]
+    pend = (st["n_arr"] - st["n_disp"]) > 0
+    idle = ~pend & (st["in_flight"] == 0) & (st["qstate"] != INACTIVE)
+    due_f = st["last_exec"] + _round1(c, p["alpha"] * st["iat"])
+    due = jnp.min(jnp.where(idle & (due_f > now), due_f, _INF))
+    top = jnp.where(
+        st["n_armed"] > 0,
+        st["armed"][jnp.clip(st["n_armed"] - 1, 0, A - 1)], _INF)
+    arm = (live & (p["family"] == FAM_MQFQ) & jnp.isfinite(due)
+           & (due < top))
+    can = st["n_armed"] < A
+    slot = jnp.clip(st["n_armed"], 0, A - 1)
+    return _upd(
+        st,
+        armed=_set(st["armed"], slot, due, arm & can),
+        n_armed=st["n_armed"] + _i(arm & can),
+        armed_ovf=st["armed_ovf"] | (arm & ~can))
+
+
+# every key the dispatch drain (choose + commit) can write; the drain
+# while carries exactly these. Everything else — crucially the (NE, 6)
+# output record and the timer stack, plus the per-flow arrival-side
+# estimates — is read-only during the drain and rides in the closure:
+# a full-state carry made the while thread ~70 buffers (o_rec's ~MBs
+# included) through every execution, which cost more than the drain's
+# actual work
+_DRAIN_KEYS = _UPDATE_KEYS + (
+    "decisions", "gvt", "n_disp", "vt", "in_flight", "last_exec",
+    "outstanding", "r_last_use", "c_exists", "c_fn", "c_idle_seq",
+    "c_last_use", "pool_total", "pool_evictions", "cold", "warm",
+    "host_warm", "running_bytes", "run_cnt", "demand_sum", "busy_time",
+    "s_active", "s_time", "s_seq", "s_flow", "s_inv", "s_service",
+    "s_charged", "s_container", "s_disp_t", "s_overhead", "s_stype",
+    "dispatch_seq")
+
+
+# -- the event loop ----------------------------------------------------------
+def _work_left(c, st):
+    """Per-lane liveness: trace unread, completions in flight, or
+    timers armed."""
+    return ((st["arr_ptr"] < c["n_events"])
+            | st["s_active"].any() | (st["n_armed"] > 0))
+
+
+def _event_step(p, c, st):
+    """One event (arrival | completion | timer) + the dispatch drain.
+    Every write is gated on ``live`` so the step is an exact no-op for
+    a lane whose trace has finished — the chunked driver (see
+    ``sweep.run_batch``) runs fixed-size ``fori_loop`` blocks with no
+    per-iteration lane select, and finished lanes simply coast."""
+    NE = c["times"].shape[0]
+    A = st["armed"].shape[0]
+    live = _work_left(c, st) & (st["steps"] < c["max_steps"])
+    t_arr = jnp.where(st["arr_ptr"] < c["n_events"],
+                      c["times"][jnp.clip(st["arr_ptr"], 0, NE - 1)],
+                      _INF)
+    # completing slot: earliest s_time (bit view; inactive slots hold
+    # +inf), dispatch order on ties — picked here once, shared with
+    # _handle_complete (the arrival handler does not touch slots)
+    sbt = _bits(st["s_time"])
+    mbt = jnp.min(jnp.where(st["s_active"], sbt, _IMAX))
+    si = jnp.argmin(jnp.where(st["s_active"] & (sbt == mbt),
+                              st["s_seq"], _I32MAX))
+    t_cmp = jnp.where(mbt < _IMAX, st["s_time"][si], _INF)
+    t_tmr = jnp.where(
+        st["n_armed"] > 0,
+        st["armed"][jnp.clip(st["n_armed"] - 1, 0, A - 1)], _INF)
+    # a finished lane freezes its clock (all three times are +inf)
+    now = jnp.where(live, jnp.minimum(jnp.minimum(t_arr, t_cmp), t_tmr),
+                    st["now"])
+    # heap order at equal times: ARRIVAL < COMPLETE < TIMER
+    en_arr = live & (t_arr == now)
+    en_cmp = live & ~en_arr & (t_cmp == now)
+    en_tmr = live & ~en_arr & ~en_cmp
+    st = _upd(st, now=now, events=st["events"] + _i(live),
+              n_armed=st["n_armed"] - _i(en_tmr & (st["n_armed"] > 0)))
+    # the event's flow, read before the handlers advance arr_ptr /
+    # recycle the slot (arrival and completion are mutually exclusive,
+    # so one merged MQFQ state-machine update serves both — the scalar
+    # plane runs it once per event too)
+    f_arr = c["fn_idx"][jnp.clip(st["arr_ptr"], 0, NE - 1)]
+    f_ev = jnp.where(en_cmp, st["s_flow"][si], f_arr)
+    st = _handle_arrival(p, c, st, now, en_arr)
+    st = _handle_complete(p, c, st, now, en_cmp, si)
+    st = _update_state(p, c, st, f_ev, now,
+                       (en_arr | en_cmp) & (p["family"] == FAM_MQFQ))
+
+    # dispatch drain: the mandatory first attempt (scalar plane calls
+    # choose after every event) runs inline and gates on ``live``; the
+    # while body then commits the checked attempt and re-attempts, so
+    # its trip count is the number of *successful* dispatches (max
+    # across lanes) and the always-failing final attempt costs one
+    # choose, not a fully masked commit
+    st, ok, f = _try_choose(p, c, st, now, live)
+
+    def dcond(carry):
+        _, ok, _ = carry
+        return ok
+
+    def dbody(carry):
+        sub, _, f = carry
+        stt = _commit_dispatch(p, c, {**st, **sub}, now, f)
+        stt, ok, f = _try_choose(p, c, stt, now, jnp.asarray(True))
+        return {k: stt[k] for k in _DRAIN_KEYS}, ok, f
+
+    sub, _, _ = lax.while_loop(
+        dcond, dbody, ({k: st[k] for k in _DRAIN_KEYS}, ok, f))
+    st = _upd(st, **sub)
+    st = _sample(p, c, st, now, live)
+    st = _arm_timer(p, c, st, now, live)
+    return _upd(st, steps=st["steps"] + _i(live))
+
+
+def simulate_chunk(p, c, st, n_steps: int):
+    """``n_steps`` event steps as one fixed-trip ``fori_loop`` — the
+    unit the chunked driver launches. A plain counted loop (instead of
+    ``while_loop``) matters under ``vmap``: a batched-cond while
+    re-selects every carried array per iteration, which double-buffers
+    the per-invocation record array every event (the largest single
+    cost at fig8 scale); the fori body is select-free and XLA updates
+    the donated state buffers in place."""
+
+    def body(_i, st):
+        return _event_step(p, c, st)
+
+    return lax.fori_loop(0, n_steps, body, st)
+
+
+def simulate_one(p, c, st):
+    """Run one configuration's whole trace in a single launch; returns
+    the final state (including the per-invocation output arrays). vmap
+    over ``p`` and ``st`` (leading config axis), ``c`` shared.
+    ``sweep.run_batch`` instead drives ``simulate_chunk`` blocks from
+    the host (cheaper per step, same trajectory)."""
+
+    def cond(st):
+        return _work_left(c, st) & (st["steps"] < c["max_steps"])
+
+    st = lax.while_loop(cond, lambda st: _event_step(p, c, st), st)
+    return _upd(st, step_overflow=_work_left(c, st))

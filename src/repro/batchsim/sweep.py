@@ -1,0 +1,294 @@
+"""Config-axis sweeps: grid builders, the vmapped runner, and the
+serial scalar reference.
+
+``run_batch(pa, points)`` stacks the config points into one leading
+axis, broadcasts a fresh state per lane and executes
+``jit(vmap(simulate_one))`` — one XLA launch for the whole grid — then
+reduces the per-invocation outputs to per-config aggregates (latency
+mean/p50/p99, cold-start %, fairness gap/bound, utilization).
+
+``run_scalar_reference(pa, **point)`` replays the *same* padded trace
+through the scalar ``SimExecutor`` with an equivalent ``ServerConfig``
+and returns the same aggregate dict (plus the recorded per-invocation
+dispatch order) — the differential suite and the
+``benchmarks/scale.py --batch-compare`` gate both drive this pair.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.batchsim.state import (FAM_FCFS, FAM_MQFQ, FAM_SJF,
+                                  START_TYPE_NAMES, build_consts,
+                                  init_state, make_params)
+from repro.batchsim.step import _work_left, simulate_chunk, simulate_one
+from repro.server.metrics import nearest_rank
+from repro.workloads.traces import PaddedArrivals, TraceEvent
+
+FAMILY_BY_NAME = {"mqfq-sticky": FAM_MQFQ, "mqfq": FAM_MQFQ,
+                  "sfq": FAM_MQFQ, "fcfs": FAM_FCFS, "sjf": FAM_SJF}
+
+
+def stack_params(points: Sequence[Dict]) -> Dict:
+    """Stack per-config param dicts (``state.make_params``) into one
+    leading config axis."""
+    if not points:
+        raise ValueError("empty config grid")
+    return {k: jnp.asarray(np.stack([np.asarray(pt[k]) for pt in points]))
+            for k in points[0]}
+
+
+_RUNNER = jax.jit(jax.vmap(simulate_one, in_axes=(0, None, 0)))
+
+# events per chunk launch: large enough that the host round-trip
+# (dispatch + liveness sync, ~0.2ms) is noise, small enough that the
+# post-finish overshoot (up to CHUNK-1 gated no-op steps) is too
+# (A/B at fig8 scale: 128 beat 64 by ~8% — fewer liveness syncs —
+# and 256 would overshoot short differential traces badly)
+_CHUNK = 128
+
+
+@partial(jax.jit, donate_argnums=(2,))
+def _run_chunk(p, c, st):
+    """One fixed-size block of event steps for every lane, plus the
+    "anyone still running?" scalar the host loop polls. ``st`` is
+    donated: XLA reuses the state buffers across launches, so a step's
+    scatters update in place — the single-launch ``while_loop`` runner
+    re-selected every carried array per iteration instead, which
+    double-buffered the (NE, 6) record array every event and dominated
+    the whole sweep at fig8 scale."""
+    st = jax.vmap(lambda pp, ss: simulate_chunk(pp, c, ss, _CHUNK),
+                  in_axes=(0, 0))(p, st)
+    live = jax.vmap(lambda ss: _work_left(c, ss)
+                    & (ss["steps"] < c["max_steps"]))(st)
+    return st, live.any()
+
+
+def run_batch(pa: PaddedArrivals, points: Sequence[Dict], *,
+              max_steps: Optional[int] = None,
+              consts: Optional[Dict] = None,
+              init: Optional[Dict] = None) -> Dict:
+    """Run every config point over ``pa`` in one chunked device loop.
+
+    Returns ``{"raw": <final states, leading config axis>,
+    "summary": [per-config aggregate dicts]}``. Slot capacities are
+    sized to the grid (max D, max pool size), so grids sharing those
+    maxima and the padded trace shape reuse one compiled executable.
+    Pass ``consts=build_consts(pa)`` / ``init=`` to skip rebuilding
+    them across repeated calls (the benchmark's timed loop).
+    """
+    G = len(points)
+    p = stack_params(points)
+    if consts is None:
+        consts = build_consts(pa, max_steps=max_steps)
+    F = len(pa.fn_ids)
+    NE = pa.times.shape[0]
+    S = int(max(int(pt["d"]) for pt in points))
+    C = int(max(int(pt["pool_size"]) for pt in points)) + S + 1
+    A = 2 * F + 8
+    if init is None:
+        init = init_state(F, NE, S, C, A)
+    out = jax.tree_util.tree_map(
+        lambda x: jnp.broadcast_to(x, (G,) + x.shape), init)
+    while True:
+        out, alive = _run_chunk(p, consts, out)
+        if not bool(alive):
+            break
+    out = dict(out)
+    out["step_overflow"] = jax.vmap(lambda ss: _work_left(consts, ss))(out)
+    if bool(out["step_overflow"].any()):
+        raise RuntimeError(
+            "batchsim step cap hit with work remaining — raise max_steps")
+    if bool(out["armed_ovf"].any()):
+        raise RuntimeError("batchsim armed-timer stack overflow")
+    n = int(pa.n_events)
+    arr = np.asarray(pa.times[:n])
+    # one device pull + vectorized numpy over the whole config axis (a
+    # per-config python loop of device slices was a visible fraction of
+    # the sweep at fig8-grid scale); unpack the packed output record
+    # into the per-field "o_*" views callers index
+    out = dict(out)
+    rec = np.asarray(out["o_rec"])
+    out["o_dispatch"] = rec[:, :, 0]
+    out["o_completion"] = rec[:, :, 1]
+    out["o_service"] = rec[:, :, 2]
+    out["o_overhead"] = rec[:, :, 3]
+    out["o_start"] = rec[:, :, 4].astype(np.int64)
+    out["o_order"] = rec[:, :, 5].astype(np.int64)
+    lat = np.sort(rec[:, :n, 1] - arr[None, :], axis=1)
+    cold = np.asarray(out["cold"])
+    warm = np.asarray(out["warm"])
+    hwarm = np.asarray(out["host_warm"])
+    wtot = np.maximum(cold + warm + hwarm, 1)
+    nw = np.asarray(out["n_windows"])
+    dur = np.asarray(out["now"])
+    evcs = np.asarray(out["pool_evictions"])
+    decs = np.asarray(out["decisions"])
+    evts = np.asarray(out["events"])
+    gmax = np.asarray(out["gap_max"])
+    gsum = np.asarray(out["gap_sum"])
+    bsum = np.asarray(out["bound_sum"])
+    util = np.asarray(out["util_integral"])
+    summary = []
+    for g in range(G):
+        row = lat[g]
+        summary.append({
+            "invocations": n,
+            "mean_latency": float(row.mean()) if n else 0.0,
+            "p50_latency": float(nearest_rank(row, 0.50)),
+            "p99_latency": float(nearest_rank(row, 0.99)),
+            "cold_pct": 100.0 * float(cold[g]) / float(wtot[g]),
+            "cold": int(cold[g]),
+            "warm": int(warm[g]),
+            "host_warm": int(hwarm[g]),
+            "pool_evictions": int(evcs[g]),
+            "decisions": int(decs[g]),
+            "events": int(evts[g]),
+            "n_windows": int(nw[g]),
+            "gap_max": float(gmax[g]),
+            "gap_mean": float(gsum[g]) / nw[g] if nw[g] else 0.0,
+            "bound_mean": float(bsum[g]) / nw[g] if nw[g] else 0.0,
+            "mean_utilization": float(util[g]) / max(float(dur[g]), 1e-9),
+            "duration": float(dur[g]),
+        })
+    return {"raw": out, "summary": summary}
+
+
+# -- serial scalar reference -------------------------------------------------
+def _trace_from(pa: PaddedArrivals) -> List[TraceEvent]:
+    n = int(pa.n_events)
+    return [TraceEvent(float(pa.times[k]), pa.fn_ids[int(pa.fn_idx[k])])
+            for k in range(n)]
+
+
+def make_scalar_policy(point: Dict):
+    """The scalar Policy instance equivalent to a ``make_params``
+    point."""
+    from repro.core.mqfq import MQFQSticky
+    from repro.core.policies import make_policy
+    fam = int(point["family"])
+    if fam == FAM_MQFQ:
+        return MQFQSticky(T=float(point["T"]),
+                          alpha=float(point["alpha"]),
+                          sticky=bool(point["sticky"]),
+                          vt_by_service=bool(point["vt_by_service"]),
+                          deficit_vt=bool(point["deficit"]))
+    return make_policy("fcfs" if fam == FAM_FCFS else "sjf")
+
+
+def run_scalar_reference(pa: PaddedArrivals, point: Dict,
+                         trace: Optional[List[TraceEvent]] = None) -> Dict:
+    """One config point through the scalar ``SimExecutor`` — the
+    differential reference. Returns the batch plane's aggregate dict
+    plus per-invocation arrays and the observed dispatch order."""
+    from repro.server.config import ServerConfig, make_server
+
+    policy = make_scalar_policy(point)
+    cfg = ServerConfig(
+        d=int(point["d"]), n_devices=1,
+        pool_size=int(point["pool_size"]),
+        capacity_bytes=int(point["capacity"]),
+        h2d_bw=float(point["h2d_bw"]), beta=float(point["beta"]),
+        fairness_window=float(point["window"]),
+        strict_reclaim=False, metrics="full")
+    server = make_server(cfg, fns=dict(pa.fns), policy=policy)
+
+    order: List[int] = []
+    orig = policy.on_dispatch
+
+    def record(q, inv, now):
+        order.append(inv.inv_id)
+        orig(q, inv, now)
+
+    policy.on_dispatch = record
+    res = server.run_trace(trace if trace is not None
+                           else _trace_from(pa))
+
+    n = int(pa.n_events)
+    stype = np.full(n, -1, dtype=np.int64)
+    dispatch = np.full(n, -1.0)
+    completion = np.full(n, -1.0)
+    service = np.zeros(n)
+    overhead = np.zeros(n)
+    code = {name: i for i, name in enumerate(START_TYPE_NAMES)}
+    for inv in res.invocations:
+        k = inv.inv_id
+        dispatch[k] = inv.dispatch_time
+        completion[k] = inv.completion
+        service[k] = inv.service_time
+        overhead[k] = inv.overhead
+        stype[k] = code[inv.start_type]
+    pool = res.pool
+    wins = res.fairness.windows
+    cp = server.control
+    lat = np.sort(completion - np.asarray(pa.times[:n]))
+    wtot = pool.cold_starts + pool.warm_starts + pool.host_warm_starts
+    return {
+        "order": order,
+        "dispatch": dispatch, "completion": completion,
+        "service": service, "overhead": overhead, "start": stype,
+        "invocations": n,
+        "mean_latency": float(lat.mean()) if n else 0.0,
+        "p50_latency": float(nearest_rank(lat, 0.50)),
+        "p99_latency": float(nearest_rank(lat, 0.99)),
+        "cold": pool.cold_starts, "warm": pool.warm_starts,
+        "host_warm": pool.host_warm_starts,
+        "cold_pct": (100.0 * pool.cold_starts / wtot) if wtot else 0.0,
+        "pool_evictions": pool.evictions,
+        "decisions": policy.decisions,
+        "n_windows": len(wins),
+        "gap_max": max((w.max_gap for w in wins), default=0.0),
+        "gap_mean": (sum(w.max_gap for w in wins) / len(wins)
+                     if wins else 0.0),
+        "bound_mean": (sum(w.bound for w in wins) / len(wins)
+                       if wins else 0.0),
+        "mean_utilization": cp.util_integral / max(res.duration, 1e-9),
+        "duration": res.duration,
+    }
+
+
+# -- fig8-style grids --------------------------------------------------------
+FIG8_T_VALUES = (0.0, 1.0, 5.0, 10.0, 20.0, 50.0)
+FIG8_ALPHAS = (0.0, 0.5, 1.0, 2.0, 4.0, 6.0)
+
+
+def fig8_grid(F: int, *, d: int = 2, h2d_bw: float = 12 * 2**30,
+              pool_size: int = 32) -> List[Tuple[str, Dict]]:
+    """The fig8 panels (a)/(b) + sticky ablation as labelled config
+    points: T x vt_by_service, the alpha sweep, sticky on/off."""
+    pts: List[Tuple[str, Dict]] = []
+    common = dict(d=d, h2d_bw=h2d_bw, pool_size=pool_size)
+    for T in FIG8_T_VALUES:
+        for vt in (True, False):
+            pts.append((f"8a:T={T:g}:vt={'service' if vt else 'unit'}",
+                        make_params(F, T=T, vt_by_service=vt, **common)))
+    for a in FIG8_ALPHAS:
+        pts.append((f"8b:alpha={a:g}",
+                    make_params(F, alpha=a, **common)))
+    for sticky in (True, False):
+        pts.append((f"sticky={sticky}",
+                    make_params(F, sticky=sticky, **common)))
+    return pts
+
+
+def sensitivity_grid(F: int, *, d: int = 2, h2d_bw: float = 12 * 2**30,
+                     pool_size: int = 32) -> List[Tuple[str, Dict]]:
+    """The full T x alpha x vt_by_service x sticky cross product — the
+    "whole sensitivity sweep in one launch" grid the throughput gate
+    measures (the fig8 panels are 1-D slices of this)."""
+    pts = []
+    for T in FIG8_T_VALUES:
+        for a in FIG8_ALPHAS:
+            for vt in (True, False):
+                for sticky in (True, False):
+                    pts.append((
+                        f"T={T:g}:a={a:g}:vt={int(vt)}:s={int(sticky)}",
+                        make_params(F, T=T, alpha=a, vt_by_service=vt,
+                                    sticky=sticky, d=d, h2d_bw=h2d_bw,
+                                    pool_size=pool_size)))
+    return pts

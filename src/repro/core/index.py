@@ -53,8 +53,27 @@ from repro.core.flow import FlowQueue, QueueState
 
 
 def _eligible(vt: float, global_vt: float, T: float) -> bool:
-    """Eq. 1 eligibility (with the VT-floor work-conservation case)."""
+    """Eq. 1 eligibility (with the VT-floor work-conservation case).
+    Mirrored element-wise by ``repro.batchsim.step``; exposed as
+    ``eligible`` for the differential suite's cross-checks."""
     return vt < global_vt + T or vt <= global_vt
+
+
+eligible = _eligible
+
+
+def candidate_key(parallelism: int, qlen: int, in_flight: int,
+                  ins: int) -> Tuple[int, ...]:
+    """The sticky tie-break as a pure sort key: longest queue first with
+    creation-order (``ins``) ties at D == 1, fewest-in-flight then
+    longest-queue at D != 1 — exactly the order the candidate heaps
+    below encode and ``best_candidate`` pops. The vectorized batch plane
+    (``repro.batchsim.step``) reproduces this key with a masked
+    lexicographic argmin; the differential suite cross-checks both
+    against this function."""
+    if parallelism == 1:
+        return (-qlen, ins)
+    return (in_flight, -qlen, ins)
 
 
 class SchedulerIndex:

@@ -48,6 +48,27 @@ _THROTTLED = QueueState.THROTTLED
 _INACTIVE = QueueState.INACTIVE
 
 
+def throttled(vt: float, global_vt: float, T: float) -> bool:
+    """The scalar plane's throttle test, as a pure function of the three
+    scalars it depends on: complement of Eq. 1's eligibility
+    ``VT < Global_VT + T``, except the queue at the Global_VT floor is
+    always eligible (work conservation, so T=0 degrades to classic SFQ).
+    This is THE throttle arithmetic — ``MQFQSticky`` routes through it
+    (modulo the inlined copy in ``_update_state``) and the vectorized
+    batch plane (``repro.batchsim.step``) mirrors it element-wise; the
+    differential suite cross-checks both against this function."""
+    return vt >= global_vt + T and vt > global_vt
+
+
+def ttl_expired(now: float, last_exec: float, alpha: float,
+                iat: float) -> bool:
+    """Anticipatory TTL lapse test for an *idle* queue (no pending work,
+    nothing in flight): the queue falls to Inactive once ``alpha * IAT``
+    has passed since its last dispatch-or-completion. Pure mirror point
+    for ``repro.batchsim`` — same caveat as ``throttled``."""
+    return now - last_exec >= alpha * iat
+
+
 class MQFQSticky(Policy):
     name = "mqfq-sticky"
     anticipatory = True
@@ -87,10 +108,8 @@ class MQFQSticky(Policy):
             heapq.heappop(h)
 
     def _throttled(self, q: FlowQueue) -> bool:
-        """Complement of Eq. 1's eligibility VT < Global_VT + T, except the
-        queue at the Global_VT floor is always eligible (work conservation,
-        T=0 == classic SFQ)."""
-        return q.vt >= self.global_vt + self.T and q.vt > self.global_vt
+        """See module-level ``throttled`` (the shared arithmetic)."""
+        return throttled(q.vt, self.global_vt, self.T)
 
     def _update_state(self, q: FlowQueue, now: float) -> None:
         """Same state machine as the reference, plus index maintenance.

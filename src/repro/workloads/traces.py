@@ -193,3 +193,79 @@ def make_workload(kind: str, n_fns: int = 24, duration: float = 300.0,
     if kind == "azure":
         return fns, azure_trace(fns, duration, trace_id=trace_id)
     raise ValueError(kind)
+
+
+# -- padded arrays for the vectorized batch simulator -----------------------
+class PaddedArrivals(NamedTuple):
+    """A whole trace materialized into fixed-shape arrays for
+    ``repro.batchsim``. Built *through* ``make_workload`` so every
+    per-function RNG stream is, by construction, element-wise identical
+    to the lazy streams the scalar plane consumes.
+
+    Padding convention: ``times`` beyond ``n_events`` hold ``+inf`` and
+    the matching ``fn_idx`` entries hold ``-1`` — a padded slot can never
+    win a "next event" argmin against any real arrival, so padding can
+    never introduce phantom arrivals. ``per_fn_times`` rows are padded
+    with ``+inf`` past ``per_fn_counts[i]`` for the same reason.
+    """
+    fn_ids: Tuple[str, ...]          # index -> fn_id (dict order)
+    fns: Dict[str, FunctionSpec]
+    times: "np.ndarray"              # (capacity,) float64, +inf padded
+    fn_idx: "np.ndarray"             # (capacity,) int32, -1 padded
+    per_fn_times: "np.ndarray"       # (F, per_fn_capacity) float64, +inf pad
+    per_fn_counts: "np.ndarray"      # (F,) int32
+    n_events: int                    # true merged event count
+
+
+def padded_arrivals(kind: str, n_fns: int = 24, duration: float = 300.0,
+                    total_rps: float = 2.0, trace_id: int = 4, seed: int = 0,
+                    mix: List[str] = DEFAULT_MIX,
+                    capacity: Optional[int] = None,
+                    per_fn_capacity: Optional[int] = None) -> PaddedArrivals:
+    """Materialize ``make_workload(kind, ...)`` into padded fixed-shape
+    arrays. ``capacity``/``per_fn_capacity`` fix the array sizes (so a
+    sweep over trace ids can share one jitted shape); a trace that does
+    not fit raises rather than silently truncating.
+    """
+    import numpy as np
+
+    fns, trace = make_workload(kind, n_fns=n_fns, duration=duration,
+                               total_rps=total_rps, trace_id=trace_id,
+                               seed=seed, mix=mix)
+    fn_ids = tuple(fns)
+    index = {fid: i for i, fid in enumerate(fn_ids)}
+    n = len(trace)
+    if capacity is None:
+        capacity = n
+    if n > capacity:
+        raise ValueError(
+            f"padded_arrivals capacity={capacity} cannot hold the "
+            f"{n} events of {kind!r} (n_fns={n_fns}, duration={duration}, "
+            f"trace_id={trace_id}); raise capacity — refusing to truncate")
+
+    times = np.full(capacity, np.inf, dtype=np.float64)
+    fn_idx = np.full(capacity, -1, dtype=np.int32)
+    counts = np.zeros(len(fn_ids), dtype=np.int32)
+    for k, ev in enumerate(trace):
+        times[k] = ev.time
+        fn_idx[k] = index[ev.fn_id]
+        counts[fn_idx[k]] += 1
+
+    max_per_fn = int(counts.max()) if n else 0
+    if per_fn_capacity is None:
+        per_fn_capacity = max_per_fn
+    if max_per_fn > per_fn_capacity:
+        worst = fn_ids[int(counts.argmax())]
+        raise ValueError(
+            f"padded_arrivals per_fn_capacity={per_fn_capacity} cannot "
+            f"hold the {max_per_fn} arrivals of {worst!r}; raise "
+            f"per_fn_capacity — refusing to truncate")
+    per_fn = np.full((len(fn_ids), per_fn_capacity), np.inf,
+                     dtype=np.float64)
+    fill = np.zeros(len(fn_ids), dtype=np.int32)
+    for k in range(n):
+        i = fn_idx[k]
+        per_fn[i, fill[i]] = times[k]
+        fill[i] += 1
+
+    return PaddedArrivals(fn_ids, fns, times, fn_idx, per_fn, counts, n)

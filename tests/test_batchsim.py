@@ -1,0 +1,159 @@
+"""Differential suite for the vectorized batch simulator.
+
+The batch plane (``repro.batchsim``) is an exact array-program mirror
+of the scalar ``SimExecutor`` fast path, so the tests hold it to the
+scalar plane *per invocation*: identical dispatch order, bit-identical
+integer aggregates, and float aggregates within 1e-9 (both planes are
+float64; the residual is reduction-order rounding). One shared batch
+run covers every differential case — policy families x T x D x memory
+pressure ride the vmapped config axis of a single compiled executable.
+
+Also covers the padded-trace export (``workloads.traces
+.padded_arrivals``): padding can never introduce phantom arrivals, the
+per-function streams match ``make_workload`` element-wise, and
+undersized capacities raise instead of truncating.
+"""
+import os
+
+os.environ.setdefault("JAX_PLATFORMS", "cpu")  # no GPU needed, ever
+
+import numpy as np
+import pytest
+
+from repro.batchsim import FAM_FCFS, FAM_MQFQ, FAM_SJF, make_params
+from repro.batchsim.sweep import run_batch, run_scalar_reference
+from repro.workloads.traces import make_workload, padded_arrivals
+
+GB = 2 ** 30
+
+# policy x T x D x memory-pressure differential matrix (names show up
+# in pytest ids). sticky=False plain MQFQ is deliberately absent: its
+# candidate draw is a different (statistically equivalent) RNG stream
+# than the scalar Mersenne one, so it can never match per-invocation.
+CASES = [
+    ("sticky-mempress", dict(family=FAM_MQFQ, T=5.0, alpha=2.0,
+                             sticky=True, pool_size=3,
+                             capacity_bytes=2.5 * GB, h2d_bw=8 * GB, d=2)),
+    ("sfq-d1", dict(family=FAM_MQFQ, T=0.0, alpha=2.0, sticky=True, d=1)),
+    ("vt-unit", dict(family=FAM_MQFQ, T=10.0, alpha=1.0, sticky=True,
+                     vt_by_service=False, d=2)),
+    ("deficit-d3", dict(family=FAM_MQFQ, T=10.0, alpha=2.0, sticky=True,
+                        deficit_vt=True, d=3)),
+    ("fcfs", dict(family=FAM_FCFS, d=2)),
+    ("sjf", dict(family=FAM_SJF, d=2)),
+    ("window10", dict(family=FAM_MQFQ, T=10.0, alpha=4.0, sticky=True,
+                      fairness_window=10.0, d=2)),
+]
+
+INT_KEYS = ("cold", "warm", "host_warm", "pool_evictions", "decisions",
+            "n_windows", "invocations")
+FLOAT_KEYS = ("mean_latency", "p50_latency", "p99_latency", "gap_max",
+              "gap_mean", "bound_mean", "mean_utilization", "duration")
+FLOAT_TOL = 1e-9
+
+
+@pytest.fixture(scope="module")
+def trace():
+    return padded_arrivals("zipf", n_fns=8, duration=300.0,
+                           total_rps=1.0, seed=3)
+
+
+@pytest.fixture(scope="module")
+def batch(trace):
+    """One vmapped run over every differential case: a single compile,
+    shared by all parametrized asserts below."""
+    F = len(trace.fn_ids)
+    points = [make_params(F, **kw) for _, kw in CASES]
+    return points, run_batch(trace, points)
+
+
+@pytest.mark.parametrize("g", range(len(CASES)),
+                         ids=[name for name, _ in CASES])
+def test_differential_vs_scalar(trace, batch, g):
+    points, out = batch
+    ref = run_scalar_reference(trace, points[g])
+    s = out["summary"][g]
+    raw = out["raw"]
+    n = int(trace.n_events)
+
+    # per-invocation dispatch order, exactly
+    border = np.asarray(raw["o_order"][g, :n])
+    horder = np.full(n, -1, dtype=np.int64)
+    for rank, inv in enumerate(ref["order"]):
+        horder[inv] = rank
+    assert (border == horder).all(), (
+        f"dispatch order diverged on {int((border != horder).sum())} "
+        f"of {n} invocations")
+
+    # per-invocation times and start types
+    np.testing.assert_allclose(
+        np.asarray(raw["o_dispatch"][g, :n]), ref["dispatch"],
+        rtol=0, atol=FLOAT_TOL)
+    np.testing.assert_allclose(
+        np.asarray(raw["o_completion"][g, :n]), ref["completion"],
+        rtol=0, atol=FLOAT_TOL)
+    assert (np.asarray(raw["o_start"][g, :n]) == ref["start"]).all()
+
+    # aggregates: integers exact, floats within reduction-order noise
+    for k in INT_KEYS:
+        assert int(s[k]) == int(ref[k]), (k, s[k], ref[k])
+    for k in FLOAT_KEYS:
+        assert abs(float(s[k]) - float(ref[k])) <= FLOAT_TOL, \
+            (k, s[k], ref[k])
+
+
+def test_step_cap_raises_not_truncates(trace):
+    F = len(trace.fn_ids)
+    with pytest.raises(RuntimeError, match="step cap"):
+        run_batch(trace, [make_params(F)], max_steps=7)
+
+
+# -- padded-trace export -----------------------------------------------------
+def test_padding_cannot_alias_real_arrivals(trace):
+    n = int(trace.n_events)
+    assert n > 0
+    # merged stream: +inf / -1 beyond n, finite sorted times before it
+    assert np.all(np.isinf(trace.times[n:]))
+    assert np.all(trace.fn_idx[n:] == -1)
+    assert np.all(np.isfinite(trace.times[:n]))
+    assert np.all(np.diff(trace.times[:n]) >= 0)
+    assert np.all(trace.fn_idx[:n] >= 0)
+    # per-fn rows: +inf past each count, counts partition the stream
+    for i in range(len(trace.fn_ids)):
+        k = int(trace.per_fn_counts[i])
+        assert np.all(np.isfinite(trace.per_fn_times[i, :k]))
+        assert np.all(np.isinf(trace.per_fn_times[i, k:]))
+    assert int(trace.per_fn_counts.sum()) == n
+
+
+def test_streams_match_make_workload_elementwise():
+    kw = dict(n_fns=8, duration=300.0, total_rps=1.0, seed=3)
+    pa = padded_arrivals("zipf", **kw)
+    fns, events = make_workload("zipf", **kw)
+    assert pa.fn_ids == tuple(fns)
+    assert int(pa.n_events) == len(events)
+    idx = {fid: i for i, fid in enumerate(pa.fn_ids)}
+    got = [(float(t), int(f)) for t, f in
+           zip(pa.times[:pa.n_events], pa.fn_idx[:pa.n_events])]
+    want = [(ev.time, idx[ev.fn_id]) for ev in events]
+    assert got == want  # element-wise, not just distributionally
+    # per-fn views are the same streams, demultiplexed in order
+    fill = np.zeros(len(pa.fn_ids), dtype=int)
+    for ev in events:
+        i = idx[ev.fn_id]
+        assert float(pa.per_fn_times[i, fill[i]]) == ev.time
+        fill[i] += 1
+    assert (fill == pa.per_fn_counts).all()
+
+
+def test_oversize_grid_raises_clear_error():
+    kw = dict(n_fns=4, duration=60.0, total_rps=2.0, seed=0)
+    pa = padded_arrivals("zipf", **kw)
+    with pytest.raises(ValueError, match="refusing to truncate"):
+        padded_arrivals("zipf", capacity=int(pa.n_events) - 1, **kw)
+    with pytest.raises(ValueError, match="refusing to truncate"):
+        padded_arrivals(
+            "zipf", per_fn_capacity=int(pa.per_fn_counts.max()) - 1, **kw)
+    # sized-up capacities are fine and padded
+    big = padded_arrivals("zipf", capacity=int(pa.n_events) + 32, **kw)
+    assert np.all(np.isinf(big.times[int(big.n_events):]))
