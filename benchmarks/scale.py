@@ -132,6 +132,14 @@ DATAPATH_P99_FLOOR_S = 0.01
 # single-core XLA:CPU box is width-limited and measures ~5-6.5x, which
 # the documented default slack in scripts/ci.sh accounts for
 BATCH_SPEEDUP_MIN = 10.0
+# fault-recovery gate (--fault-compare): the chaos arm (permanent
+# device loss + endpoint faults) with recovery ON must hold goodput
+# >= FAULT_GOODPUT_MIN and p99 <= FAULT_P99_RATIO_MAX x the fault-free
+# arm's p99; the recovery-OFF arm must measurably collapse below the
+# goodput bar — otherwise the injected faults were too soft for the
+# gate to mean anything
+FAULT_GOODPUT_MIN = 0.95
+FAULT_P99_RATIO_MAX = 2.0
 # adaptive-gate margin: thresholds derived from the box's measured
 # parallel capacity keep 40% headroom — the capacity probe (pure CPU
 # loops) systematically overestimates what a *serving* pipeline
@@ -342,6 +350,19 @@ def main(argv=None) -> None:
                          "speedup at BATCH_SPEEDUP_MIN and cross-checks "
                          "every sticky config's integer aggregates "
                          "against the scalar plane exactly")
+    ap.add_argument("--fault-compare", type=int, default=0, metavar="N",
+                    help="fault-recovery gate: azure-longtail (capped at "
+                         "N events) three ways — fault-free, chaos with "
+                         "recovery (retry/requeue/quarantine/readmit), "
+                         "chaos without (naive reference platform); "
+                         "gates recovery-on goodput at FAULT_GOODPUT_MIN "
+                         "and p99 at FAULT_P99_RATIO_MAX x fault-free, "
+                         "and requires recovery-off to collapse")
+    ap.add_argument("--chaos-smoke", type=int, default=0, metavar="N",
+                    help="seeded chaos-azure-longtail at N events: "
+                         "asserts drain + conservation (every arrival "
+                         "completed, retried-to-completion, or "
+                         "explicitly shed — zero stranded)")
     ap.add_argument("--event-profile", type=int, default=0, metavar="N",
                     help="per-event fixed-cost breakdown (sample / timer "
                          "/ bus / heap / dispatch / handlers) for both "
@@ -480,6 +501,12 @@ def main(argv=None) -> None:
 
     if args.shard_compare:
         _shard_compare(args, bench, failures, speedups)
+
+    if args.fault_compare:
+        _fault_compare(args, bench, failures, speedups)
+
+    if args.chaos_smoke:
+        _chaos_smoke(args, bench, failures)
 
     if args.event_profile:
         _event_profile(args, bench)
@@ -648,6 +675,129 @@ def _datapath_compare(args, bench, failures: list, speedups: dict) -> None:
               f"{row['cold_p99_s']:6.3f}s mean {row['cold_mean_s']:6.3f}s"
               f"  e2e p99 {row['p99_s']:8.2f}s  cancelled "
               f"{row['cancelled']}", file=sys.stderr)
+
+
+# -- fault injection + recovery ------------------------------------------
+
+
+def _fault_run(n_events: int, seed: int, *, chaos: bool, recovery: bool,
+               horizon_s: float = 120.0):
+    """One arm of the fault gate: azure-longtail, 4 devices, optionally
+    under the seeded chaos plan (one *permanent* device loss + endpoint
+    faults across 30% of functions — harsh enough that a platform that
+    does not react must lose goodput)."""
+    from repro.server import ServerConfig, make_server
+
+    base_kw = {"n_fns": 40, "max_events": n_events, "seed": seed}
+    if chaos:
+        scenario, kw = "chaos-azure-longtail", dict(
+            base_kw, chaos_seed=seed, horizon_s=horizon_s, n_devices=4,
+            device_faults=1, permanent_devices=1,
+            endpoint_fault_frac=0.3, endpoint_faults_per_fn=2)
+    else:
+        scenario, kw = "azure-longtail", base_kw
+    cfg = ServerConfig(policy="mqfq-sticky", policy_kwargs={"T": 10.0},
+                       d=2, n_devices=4, pool_size=160,
+                       recovery=recovery, scenario=scenario,
+                       scenario_kwargs=kw)
+    t0 = time.perf_counter()
+    res = make_server(cfg).run_scenario()
+    return res, time.perf_counter() - t0
+
+
+def _fault_row(res, wall: float, arm: str) -> dict:
+    f = res.faults
+    return {
+        "name": f"fault_{arm}", "wall_s": round(wall, 3),
+        "goodput": round(res.goodput(), 4),
+        "p99_s": round(res.latency_quantile(0.99), 4),
+        "arrivals": f.arrivals if f else len(res.invocations),
+        "failed": f.completed_failed if f else 0,
+        "dropped": f.dropped if f else 0,
+        "shed": f.shed if f else 0,
+        "retries": f.retries if f else 0,
+        "quarantined": f.quarantined if f else 0,
+        "readmitted": f.readmitted if f else 0,
+    }
+
+
+def _fault_compare(args, bench, failures: list, speedups: dict) -> None:
+    """The recovery gate: same arrival process three ways.
+
+    fault-free            — the reference latency/goodput surface
+    chaos + recovery ON   — must hold goodput >= FAULT_GOODPUT_MIN and
+                            p99 <= FAULT_P99_RATIO_MAX x fault-free
+    chaos + recovery OFF  — the naive platform; must measurably
+                            collapse below the goodput bar, proving the
+                            injected faults are harsh enough that the
+                            recovery arm's numbers mean something
+    """
+    n = args.fault_compare
+    free, wall_free = _fault_run(n, args.seed, chaos=False, recovery=True)
+    # place fault times inside the actual run: the generated plan's
+    # horizon is the measured fault-free makespan
+    horizon = max(free.duration, 1.0)
+    on, wall_on = _fault_run(n, args.seed, chaos=True, recovery=True,
+                             horizon_s=horizon)
+    off, wall_off = _fault_run(n, args.seed, chaos=True, recovery=False,
+                               horizon_s=horizon)
+    rows = {}
+    for arm, res, wall in (("free", free, wall_free),
+                           ("recovery_on", on, wall_on),
+                           ("recovery_off", off, wall_off)):
+        row = _fault_row(res, wall, arm)
+        rows[arm] = row
+        bench.add(**row)
+        print(f"# fault [{arm:12s}] goodput {row['goodput']:6.4f}  "
+              f"p99 {row['p99_s']:7.3f}s  retries {row['retries']:3d}  "
+              f"dropped {row['dropped']:3d}  failed {row['failed']:3d}",
+              file=sys.stderr)
+    # conservation under chaos: every arrival has a final disposition
+    for arm in ("recovery_on", "recovery_off"):
+        f = (on if arm == "recovery_on" else off).faults
+        if f.accounted != f.arrivals:
+            failures.append(f"fault {arm}: {f.arrivals - f.accounted} "
+                            f"stranded arrivals (conservation violated)")
+    g_on, g_off = rows["recovery_on"]["goodput"], \
+        rows["recovery_off"]["goodput"]
+    p99_ratio = rows["recovery_on"]["p99_s"] / max(rows["free"]["p99_s"],
+                                                   1e-9)
+    speedups["fault_recovery_goodput"] = g_on
+    speedups["fault_recovery_p99_ratio"] = round(p99_ratio, 2)
+    speedups["fault_naive_goodput"] = g_off
+    print(f"# fault gate: recovery-on goodput {g_on:.4f} "
+          f"(>= {FAULT_GOODPUT_MIN}), p99 ratio {p99_ratio:.2f}x "
+          f"(<= {FAULT_P99_RATIO_MAX}x), recovery-off goodput "
+          f"{g_off:.4f} (must be < {FAULT_GOODPUT_MIN})", file=sys.stderr)
+    if g_on < FAULT_GOODPUT_MIN:
+        failures.append(f"recovery-on goodput {g_on:.4f} < "
+                        f"{FAULT_GOODPUT_MIN}")
+    if p99_ratio > FAULT_P99_RATIO_MAX:
+        failures.append(f"recovery-on p99 {p99_ratio:.2f}x fault-free > "
+                        f"{FAULT_P99_RATIO_MAX}x")
+    if g_off >= FAULT_GOODPUT_MIN:
+        failures.append(f"recovery-off goodput {g_off:.4f} did not "
+                        f"collapse below {FAULT_GOODPUT_MIN} — faults "
+                        f"too soft for the gate to bind")
+
+
+def _chaos_smoke(args, bench, failures: list) -> None:
+    """Fast-tier chaos smoke: a seeded chaos-azure-longtail run must
+    drain with zero stranded arrivals."""
+    n = args.chaos_smoke
+    res, wall = _fault_run(n, args.seed, chaos=True, recovery=True)
+    f = res.faults
+    row = _fault_row(res, wall, "chaos_smoke")
+    bench.add(**row)
+    stranded = f.arrivals - f.accounted
+    undisposed = sum(1 for i in res.invocations
+                     if not (i.done or i.shed))
+    print(f"# chaos smoke: {f.arrivals} arrivals, goodput "
+          f"{row['goodput']:.4f}, {f.retries} retries, {f.shed} shed, "
+          f"{stranded} stranded, wall {wall:.2f}s", file=sys.stderr)
+    if stranded or undisposed:
+        failures.append(f"chaos smoke: {stranded} unaccounted / "
+                        f"{undisposed} undisposed arrivals")
 
 
 # -- vectorized batch simulator: the whole sweep in one launch ------------

@@ -100,6 +100,20 @@ echo "== open-loop replay gate: mqfq-sticky vs fcfs p99 on the paced azure-repla
 # alone. CI_SPEEDUP_SLACK honored.
 python -m benchmarks.replay --replay-compare
 
+echo "== chaos smoke: seeded chaos-azure-longtail, drain + conservation =="
+# the PR-9 fault plane: a seeded chaos scenario (transient device
+# outages + endpoint error/hang faults) must drain with every arrival
+# completed, retried-to-completion, or explicitly shed — zero stranded
+python -m benchmarks.scale --sizes '' --chaos-smoke 4000
+
+echo "== fault-recovery gate: chaos recovery on/off vs fault-free (deterministic sim) =="
+# three arms on the same arrival process: recovery ON must hold goodput
+# >= 0.95 and p99 <= 2x fault-free under a permanent device loss +
+# endpoint faults; recovery OFF (the naive reference platform) must
+# measurably collapse below the goodput bar, or the gate flags the
+# fault plan as too soft to certify anything
+python -m benchmarks.scale --sizes '' --fault-compare 6000
+
 echo "== smoke: fig6 through repro.server =="
 python -m benchmarks.run --only fig6
 

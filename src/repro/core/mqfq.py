@@ -233,6 +233,23 @@ class MQFQSticky(Policy):
         self.index.note_pending_vt(q)   # deficit settle may move VT
         self._update_state(q, now)
 
+    # -- fault recovery --------------------------------------------------------
+    def on_failure(self, q: FlowQueue, inv: Invocation, now: float) -> None:
+        """Revert the dispatch-time VT charge (base) and re-learn the
+        queue's keys. The reverted VT may fall below the Global_VT
+        floor — deliberate: the wronged flow regains its seniority and
+        is immediately eligible; the monotone floor itself never drops."""
+        super().on_failure(q, inv, now)
+        self.index.note_pending_vt(q)
+        self._update_state(q, now)
+
+    def on_requeue(self, q: FlowQueue, now: float) -> None:
+        """Re-activation after a front-of-queue re-insert. Unlike
+        ``on_arrival`` there is no ``q.arrive`` — no IAT re-sample, no
+        start-tag lift — the attempt already happened once."""
+        self.index.note_pending_vt(q)
+        self._update_state(q, now)
+
     # -- cross-shard virtual-time sync -----------------------------------------
     def min_pending_vt(self) -> Optional[float]:
         """This shard's contribution to the cross-shard Global_VT

@@ -48,6 +48,25 @@ class Policy:
     def on_complete(self, q: FlowQueue, inv: Invocation, now: float) -> None:
         q.on_complete(inv, now, inv.service_time)
 
+    # -- fault recovery ------------------------------------------------------
+    # A failed attempt must leave the flow charged exactly once per
+    # *completing* attempt: ``on_failure`` reverts the dispatch-time VT
+    # charge (no tau EMA sample, no fairness service credit — the
+    # attempt did no useful work), and ``on_requeue`` re-activates the
+    # queue after the control plane re-inserts the invocation at the
+    # FRONT of ``q.pending`` (seniority preserved; arrival stats such as
+    # the IAT EMA are not re-sampled).
+
+    def on_failure(self, q: FlowQueue, inv: Invocation, now: float) -> None:
+        q.in_flight -= 1
+        q.last_exec = now
+        if inv.charged_tau is not None:
+            q.vt -= inv.charged_tau / q.weight
+            inv.charged_tau = None
+
+    def on_requeue(self, q: FlowQueue, now: float) -> None:
+        q.state = QueueState.ACTIVE
+
     def next_expiry(self, now: float,
                     bound: Optional[float] = None) -> Optional[float]:
         """Earliest strictly-future time at which this policy's internal

@@ -51,6 +51,7 @@ class DeviceDataPath:
         self.prefetches_cancelled = 0
         self.transfers_completed = 0
         self.bytes_transferred = 0
+        self.transfer_aborts = 0
 
     # -- entry points ------------------------------------------------------
     def request(self, fn_id: str, nbytes: int, now: float,
@@ -134,6 +135,80 @@ class DeviceDataPath:
             self._start_waiting(now)
             self._sync_etas()
         return True
+
+    # -- fault plane --------------------------------------------------------
+    def abort(self, fn_id: str, now: float, retry: bool = True) -> bool:
+        """Fault injection: the in-flight DMA for ``fn_id`` was killed.
+
+        With ``retry`` (recovery on) the transfer restarts from byte
+        zero — the *same* ``Transfer`` object, dispatch waiters
+        preserved — re-entering the link (or the staging queue if its
+        reservation no longer fits). With recovery off it is dropped
+        outright: the region is released and waiters fire with ``None``
+        so the executor fails the dependent attempt."""
+        t = self.transfers.get(fn_id)
+        if t is None:
+            return False
+        self.now = now
+        self.transfer_aborts += 1
+        if t.queued:
+            self.waiting.remove(t)
+        else:
+            self.link.remove(t, now)
+            self.staging.release(t.nbytes)
+        if retry:
+            t.remaining = float(t.nbytes)      # restart from byte zero
+            t.eta = INF
+            if self.staging.reserve(t.nbytes):
+                t.queued = False
+                self.link.add(t, now)
+            else:
+                t.queued = True
+                w = self.waiting               # same placement as request()
+                if t.kind == "demand":
+                    i = 0
+                    while i < len(w) and w[i].kind == "demand":
+                        i += 1
+                else:
+                    i = len(w)
+                    while i > 0 and w[i - 1].kind != "demand" \
+                            and w[i - 1].prio > t.prio:
+                        i -= 1
+                w.insert(i, t)
+                self.mem.set_upload_eta(fn_id, INF)
+            self._start_waiting(now)
+            self._sync_etas()
+            return True
+        del self.transfers[fn_id]
+        if t.kind != "demand":
+            self.n_prefetch -= 1
+            self.prefetches_cancelled += 1
+        self.mem.drop_region(fn_id)
+        self._start_waiting(now)
+        self._sync_etas()
+        for cb in t.waiters:
+            cb(None)
+        return True
+
+    def abort_all(self, now: float) -> int:
+        """Device fault: tear down the whole per-device data plane.
+        Every transfer — active, or staging-blocked — is dropped without
+        firing waiters (the control plane fails the doomed invocations
+        itself) and staging reservations are returned. Regions are NOT
+        touched here: ``fail_device`` follows up with the memory
+        manager's ``invalidate_device``."""
+        self.now = now
+        n = len(self.transfers)
+        if n == 0:
+            return 0
+        self.transfer_aborts += n
+        for t in list(self.link.active):
+            self.link.remove(t, now)
+            self.staging.release(t.nbytes)
+        self.waiting.clear()       # queued transfers hold no reservation
+        self.transfers.clear()
+        self.n_prefetch = 0
+        return n
 
     def on_region_evicted(self, fn_id: str) -> None:
         """Memory-manager evict listener: a prefetch-in-flight region

@@ -349,6 +349,23 @@ class DeviceMemoryManager:
         if r is not None and r.resident:
             self._evict_one(r)
 
+    def invalidate_device(self) -> int:
+        """Fault plane: the device died — every resident region's bytes
+        are gone. Evict them all through the normal path (bytes counted,
+        listeners notified once each, so the wall-clock executor mirrors
+        the loss onto real endpoints), clear any in-flight upload etas,
+        and rebuild the LRU heaps. Returns the number of regions
+        invalidated."""
+        n = 0
+        for r in self.regions.values():
+            if r.resident:
+                self._evict_one(r)
+                n += 1
+            elif r.upload_eta > 0.0:
+                r.upload_eta = -1.0
+        self._compact()
+        return n
+
     def on_queue_idle(self, fn_id: str, now: float) -> None:
         """Throttled/Inactive: mark for (async) LRU eviction."""
         r = self.regions.get(fn_id)

@@ -71,6 +71,7 @@ class WarmPool:
         self.warm_starts = 0
         self.host_warm_starts = 0
         self.evictions = 0
+        self.destroyed = 0      # fault plane: containers killed outright
 
     # -- introspection ------------------------------------------------------
     @property
@@ -163,6 +164,20 @@ class WarmPool:
         n_idle = self._n_idle = self._n_idle + 1
         if len(self._lru_heap) > 64 + 4 * (n_idle if n_idle > 1 else 1):
             self._compact()
+
+    def destroy(self, c: Container) -> None:
+        """Fault plane: the container's process was killed (hung attempt
+        watchdog-terminated). Unlike ``release`` it never returns to the
+        idle lists — the next start of this fn pays a cold init. Valid on
+        a busy container (the common case: it was mid-execution); an
+        idle one is removed through the normal path."""
+        self.destroyed += 1
+        if c.idle_seq >= 0:
+            self._remove(c)
+            return
+        self._count_by_fn[c.fn_id] -= 1
+        self._total -= 1
+        self._live.pop(c, None)
 
     def evict_fn(self, fn_id: str) -> None:
         """Drop idle containers of an inactive function (LRU keep-alive).

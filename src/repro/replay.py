@@ -60,7 +60,8 @@ class OpenLoopFeeder(threading.Thread):
 
     def __init__(self, submit: Callable[[str], object],
                  stream: Iterator[TraceEvent], origin: float,
-                 speedup: float = 1.0, name: str = "feeder"):
+                 speedup: float = 1.0, name: str = "feeder",
+                 injector=None):
         super().__init__(name=f"openloop-{name}", daemon=True)
         if speedup <= 0.0:
             raise ValueError(f"speedup must be > 0, got {speedup}")
@@ -74,6 +75,16 @@ class OpenLoopFeeder(threading.Thread):
         self.released = 0
         self.lateness: List[float] = []
         self.error: Optional[BaseException] = None
+        # fault plane: (trace_t, down_s) kill/restart windows — the
+        # feeder "dies" at trace-time t and releases the backlog when it
+        # "restarts" down_s trace-seconds later; the slip lands in the
+        # ordinary lateness accounting. ``injector`` (shared
+        # FaultInjector) counts the kills.
+        self._outages: List[tuple] = []
+        self._injector = injector
+
+    def add_outage(self, t: float, down_s: float) -> None:
+        self._outages.append((t, down_s))
 
     def stop(self) -> None:
         self._stop_evt.set()
@@ -91,8 +102,23 @@ class OpenLoopFeeder(threading.Thread):
         stopping = self._stop_evt.is_set
         monotonic = time.monotonic
         lateness = self.lateness
+        outages = sorted(self._outages)
+        oi = 0
+        restart_at = float("-inf")      # wall time the last kill lifts
         for ev in self._stream:
-            target = origin + ev.time * inv_speed
+            sched = origin + ev.time * inv_speed
+            while oi < len(outages) and ev.time >= outages[oi][0]:
+                t0, down = outages[oi]
+                oi += 1
+                rt = origin + (t0 + down) * inv_speed
+                if rt > restart_at:
+                    restart_at = rt
+                if self._injector is not None:
+                    self._injector.feeder_kills += 1
+            # pace against the restart when down, but measure lateness
+            # against the ORIGINAL schedule — the outage slip must show
+            # up in the feed-side accounting, not hide in it
+            target = restart_at if restart_at > sched else sched
             while True:
                 delta = target - monotonic()
                 if delta <= 0.0:
@@ -103,7 +129,7 @@ class OpenLoopFeeder(threading.Thread):
             if stopping():
                 return
             inv = submit(ev.fn_id)
-            late = monotonic() - target
+            late = monotonic() - sched
             inv.lateness = late
             lateness.append(late)
             self.released += 1
@@ -213,41 +239,70 @@ def replay_open_loop(server: Server, scenario: Optional[Scenario] = None,
                              "ServerConfig.scenario")
     ex = server.executor
     origin = time.monotonic() + lead_s
+    injector = getattr(ex, "_injector", None)
+    if injector is None:
+        injector = getattr(getattr(ex, "sharded", None), "injector", None)
 
     if isinstance(ex, ShardedWallClockExecutor) \
             and ex._hash_route is not None:
         n = len(ex.execs)
         streams = scenario.shard_streams(n)     # demux: built for this
         feeders = [OpenLoopFeeder(ex.execs[k].submit, streams[k], origin,
-                                  speedup, name=f"shard{k}")
+                                  speedup, name=f"shard{k}",
+                                  injector=injector)
                    for k in range(n)]
     elif isinstance(ex, (WallClockExecutor, ShardedWallClockExecutor)):
         feeders = [OpenLoopFeeder(ex.submit, scenario.stream(), origin,
-                                  speedup)]
+                                  speedup, injector=injector)]
     else:
         raise TypeError(
             "replay_open_loop requires a wall-clock server "
             f"(executor='wallclock'); got {type(ex).__name__}. "
             "For virtual-clock replay use Server.run_scenario().")
 
+    # fault plane: feeder kill/restart windows from the scenario's plan
+    # (shard index modulo the actual feeder count, so a plan written for
+    # a sharded replay still lands on a single-feeder run)
+    plan = getattr(scenario, "faults", None)
+    if plan is not None:
+        for ff in getattr(plan, "feeder_faults", ()):
+            feeders[ff.shard % len(feeders)].add_outage(ff.t, ff.down_s)
+
     t_start = time.monotonic()
     server.start()
     for f in feeders:
         f.start()
     deadline = None if feed_timeout is None else t_start + feed_timeout
-    for f in feeders:
-        if deadline is None:
-            f.join()
-        else:
-            f.join(max(deadline - time.monotonic(), 0.0))
-            if f.is_alive():
+    # supervise rather than sequentially join: a feeder dying at t=1s of
+    # a long trace must abort the replay NOW (its shard's arrivals are
+    # gone — the load measurement is already invalid), not after every
+    # sibling finishes feeding
+    pending = list(feeders)
+    failed: Optional[OpenLoopFeeder] = None
+    while pending and failed is None:
+        for f in pending:
+            f.join(timeout=0.05)
+            if f.error is not None:
+                failed = f
+                break
+        pending = [f for f in pending if f.is_alive()]
+        if deadline is not None and time.monotonic() > deadline:
+            for f in pending:
                 f.stop()
+            for f in pending:
                 f.join()
-    for f in feeders:
-        if f.error is not None:
-            server.stop()
-            raise RuntimeError(
-                f"open-loop feeder {f.name} failed") from f.error
+            pending = []
+    if failed is None:
+        failed = next((f for f in feeders if f.error is not None), None)
+    if failed is not None:
+        for f in feeders:
+            f.stop()
+        for f in feeders:
+            f.join(timeout=5.0)
+        server.stop()
+        raise RuntimeError(
+            f"open-loop feeder {failed.name} failed after releasing "
+            f"{failed.released} arrivals; replay aborted") from failed.error
     server.drain(timeout=drain_timeout)
     result = server.stop()
     wall_s = time.monotonic() - t_start

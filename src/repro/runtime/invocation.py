@@ -29,6 +29,14 @@ class Invocation:
     device_id: int = 0
     charged_tau: Optional[float] = None  # tau charged to VT at dispatch
     request: Optional[dict] = None       # wall-clock request payload
+    # fault plane (ISSUE 9): attempt retries consumed, and the final
+    # disposition flags — ``shed`` (rejected at arrival by degraded-mode
+    # load shedding, never queued) and ``failed`` (an injected fault the
+    # platform did not recover from: retry budget exhausted under
+    # recovery, or an error that "completed" under recovery-off).
+    retries: int = 0
+    shed: bool = False
+    failed: bool = False
     # open-loop feeder slip: how late the replay feeder released this
     # arrival relative to its trace timestamp (>= 0 — feeders never
     # release early). Separate from queueing delay: ``arrival`` is

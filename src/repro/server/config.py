@@ -105,6 +105,22 @@ class ServerConfig:
     prefetch: bool = False
     prefetch_depth: int = 4          # max background prefetches/device
     staging_bytes: int = 64 * GB     # pinned-host staging pool/device
+    # fault injection + recovery (repro.faults, ISSUE 9). ``faults`` is
+    # a fully-expanded FaultPlan (or None — the bit-identical fault-free
+    # path). ``recovery=False`` keeps the naive platform as the
+    # reference behavior: faults still inject, but nothing retries,
+    # quarantines, or sheds — errors "complete" and a dead device stays
+    # in rotation. Requires the fast event loop (sampling='transition',
+    # batch_dispatch=True) and device_layer='indexed'.
+    faults: Optional[object] = None  # FaultPlan
+    recovery: bool = True
+    retry_max: int = 3               # attempts beyond the first
+    retry_backoff_s: float = 0.05    # base of the exponential backoff
+    retry_deadline_s: float = 120.0  # give up (drop) past arrival + this
+    quarantine_s: float = 2.0        # min bench time before re-admission
+    # SLO-aware degraded mode: when predicted queueing delay exceeds
+    # this, shed newest arrivals per-tenant-fairly (None = never shed)
+    shed_threshold_s: Optional[float] = None
     # executor: "sim" (virtual clock) or "wallclock" (threads + JAX)
     executor: str = "sim"
     # metrics: "full" records every invocation + utilization sample;
@@ -128,6 +144,18 @@ def specs_from_endpoints(endpoints, *, demand: float = 0.5
                             mem_bytes=max(int(ep.weight_bytes), 1),
                             demand=demand, kind="endpoint")
         for fn_id, ep in endpoints.items()}
+
+
+def _adopt_scenario_faults(config, scenario, validate):
+    """A chaos scenario carries its seeded FaultPlan; adopt it unless the
+    caller pinned one explicitly (explicit config wins)."""
+    plan = getattr(scenario, "faults", None)
+    if plan is None or config.faults is not None:
+        return config
+    from dataclasses import replace
+    config = replace(config, faults=plan)
+    validate(config)
+    return config
 
 
 def make_server(config: ServerConfig, *,
@@ -179,6 +207,45 @@ def make_server(config: ServerConfig, *,
         raise ValueError(
             "prefetch=True requires datapath='pipeline': the scalar "
             "plane has no background transfer machinery to prefetch on")
+
+    def _validate_faults(cfg):
+        plan = cfg.faults
+        if plan is None:
+            return
+        if cfg.sampling != "transition" or not cfg.batch_dispatch:
+            raise ValueError(
+                "faults= requires the fast event loop "
+                "(sampling='transition', batch_dispatch=True): the "
+                "per_event/per-token loops are pre-fault differential "
+                "references and carry no fault events")
+        if cfg.device_layer != "indexed":
+            raise ValueError(
+                "faults= requires device_layer='indexed': the reference "
+                "layer is the pre-fault differential baseline")
+        bad = sorted({f.dev_id for f in getattr(plan, "device_faults", ())
+                      if f.dev_id >= cfg.n_devices}
+                     | {f.dev_id for f in getattr(plan, "transfer_faults", ())
+                        if f.dev_id >= cfg.n_devices})
+        if bad:
+            raise ValueError(
+                f"fault plan targets device ids {bad} but the server has "
+                f"n_devices={cfg.n_devices}; generate the plan (or the "
+                f"chaos scenario) with the server's device count")
+        if getattr(plan, "transfer_faults", ()) \
+                and cfg.datapath != "pipeline":
+            raise ValueError(
+                "transfer faults require datapath='pipeline': the "
+                "scalar plane has no in-flight transfers to abort")
+        if cfg.executor == "wallclock" and cfg.sharding != "none" \
+                and (getattr(plan, "device_faults", ())
+                     or getattr(plan, "endpoint_faults", ())
+                     or getattr(plan, "transfer_faults", ())):
+            raise ValueError(
+                "sharded wallclock supports feeder faults only; "
+                "device/endpoint/transfer faults need the monolithic "
+                "wallclock executor or the (sharded or monolithic) sim")
+
+    _validate_faults(config)
     sharded = config.sharding != "none"
     if not sharded and config.n_shards != 1:
         raise ValueError("n_shards > 1 requires sharding='hash' or "
@@ -210,6 +277,8 @@ def make_server(config: ServerConfig, *,
             scenario = make_scenario(config.scenario,
                                      **dict(config.scenario_kwargs))
             fns = scenario.fns
+            config = _adopt_scenario_faults(config, scenario,
+                                            _validate_faults)
         if fns is None:
             raise ValueError("sim executor requires fns= (or scenario=)")
         control = build_control()
@@ -226,11 +295,21 @@ def make_server(config: ServerConfig, *,
                                      **dict(config.scenario_kwargs))
             if fns is None:
                 fns = scenario.fns
+            config = _adopt_scenario_faults(config, scenario,
+                                            _validate_faults)
         if endpoints is None:
             raise ValueError("wallclock executor requires endpoints=")
         if fns is None:
             fns = specs_from_endpoints(endpoints)
         control = build_control()
+        injector = getattr(control, "injector", None)
+        if injector is not None and injector.plan.endpoint_faults:
+            # count-triggered endpoint faults inject from inside the
+            # endpoint call, sharing the control plane's injector so the
+            # per-fn attempt counters match the sim's realize-time path
+            from repro.faults import FaultyEndpoint
+            endpoints = {fn: FaultyEndpoint(ep, injector)
+                         for fn, ep in endpoints.items()}
         if sharded:
             executor = ShardedWallClockExecutor(control, endpoints, config)
         else:

@@ -68,6 +68,11 @@ class DeviceState:
     # cold-start data plane (repro.datapath.DeviceDataPath); None under
     # datapath="scalar"
     datapath: object = None
+    # fault plane: a failed device takes no new dispatches; it is
+    # re-admitted by a health check no earlier than ``quarantined_until``
+    # (and only once its fault window has actually cleared)
+    failed: bool = False
+    quarantined_until: float = 0.0
     # demand-sum cache: recomputed (with the exact dict-sum arithmetic,
     # so results stay bit-identical to a fresh scan) only after a
     # dispatch/completion changed ``demands`` — utilization() and the
@@ -128,7 +133,7 @@ class DispatchDecision:
 class ControlPlane:
     def __init__(self, policy: Policy, fns: Dict[str, FunctionSpec],
                  config: "ServerConfig", bus: Optional[EventBus] = None,
-                 dev_base: int = 0):
+                 dev_base: int = 0, injector=None):
         self.policy = policy
         self.fns = fns
         self.config = config
@@ -249,6 +254,40 @@ class ControlPlane:
         if policy.anticipatory:
             policy.state_listeners.append(self._on_state_change)
 
+        # -- fault plane (repro.faults, ISSUE 9) ---------------------------
+        # One injector per server; shards of a sharded plane receive the
+        # shared instance via ``injector=``. With faults=None every hook
+        # below is behind an ``is not None`` check and no float path
+        # changes — the fault-free plane stays bit-identical.
+        plan = getattr(config, "faults", None)
+        if injector is None and plan is not None:
+            from repro.faults import FaultInjector
+            injector = FaultInjector(plan)
+        self.injector = injector
+        self._injector = injector
+        self._recovery = bool(getattr(config, "recovery", True))
+        self._retry_max = int(getattr(config, "retry_max", 3))
+        self._retry_backoff = float(getattr(config, "retry_backoff_s", 0.05))
+        self._retry_deadline = float(
+            getattr(config, "retry_deadline_s", 120.0))
+        self.quarantine_s = float(getattr(config, "quarantine_s", 2.0))
+        self._shed_threshold = getattr(config, "shed_threshold_s", None)
+        # in-flight Invocation objects, kept only under faults: a device
+        # failure must find the records to kill/requeue (the executors
+        # hold them in heap payloads / worker frames, not by device)
+        self._inflight_inv: Dict[int, Invocation] = {}
+        self._degraded = False           # shed-mode hysteresis latch
+        self._shed_checked = -1.0        # last predictor refresh time
+        self._pred_delay = 0.0
+        if injector is not None and self._recovery:
+            # fault-aware placement: skip quarantined devices, and keep
+            # the memory hooks off dead devices. Bound as overrides so
+            # the fault-free bodies above stay byte-identical.
+            if self.sampling != "transition":
+                raise ValueError("faults= requires sampling='transition'")
+            self._pick = self._pick_device_healthy
+            self._fn_device = self._fn_device_healthy
+
     # -- queue-state hooks -----------------------------------------------------
     def _on_state_change(self, q, old, new, now) -> None:
         spec = self.fns[q.fn_id]
@@ -270,8 +309,25 @@ class ControlPlane:
     def _fn_device(self, fn_id: str) -> DeviceState:
         return self.devices[self._sticky_dev.get(fn_id, 0)]
 
+    def _fn_device_healthy(self, fn_id: str) -> DeviceState:
+        """Fault-aware override of ``_fn_device`` (bound in __init__):
+        never route memory hooks at a quarantined device."""
+        dev = self.devices[self._sticky_dev.get(fn_id, 0)]
+        if not dev.failed:
+            return dev
+        for d in self.devices:
+            if not d.failed:
+                return d
+        return dev                       # whole fleet down: degenerate
+
     # -- pipeline: arrival -----------------------------------------------------
     def on_arrival(self, inv: Invocation, now: float) -> None:
+        inj = self._injector
+        if inj is not None:
+            inj.arrivals += 1
+            if self._shed_threshold is not None and self._recovery \
+                    and self._maybe_shed(inv, now):
+                return
         self.policy.on_arrival(inv, now)
         self.pending_count += 1
         self._backlogged.add(inv.fn_id)
@@ -314,6 +370,25 @@ class ControlPlane:
         if resident:
             return resident[0]
         return min(free, key=lambda d: len(d.running))
+
+    def _pick_device_healthy(self, fn_id: str) -> Optional[DeviceState]:
+        """Fault-aware override of ``pick_device`` (bound in __init__
+        when a fault plan is active under recovery): identical placement,
+        but quarantined devices are invisible."""
+        best: Optional[DeviceState] = None
+        best_load = 0
+        for d in self.devices:
+            if d.failed:
+                continue
+            t = d.tokens
+            if t.outstanding >= t.current_d:
+                continue
+            if d.mem.is_resident(fn_id, 1e18):
+                return d
+            load = len(d.running)
+            if best is None or load < best_load:
+                best, best_load = d, load
+        return best
 
     # -- pipeline: dispatch -----------------------------------------------------
     def drain(self, now: float, budget: Optional[int] = None,
@@ -379,6 +454,8 @@ class ControlPlane:
         dev.note_dispatch(inv.inv_id, fn_id, spec)
         self._agg_dirty = True
         self._dev_util[dev.slot] = dev.utilization()
+        if self._injector is not None:
+            self._inflight_inv[inv.inv_id] = inv
         decision = DispatchDecision(inv, dev, spec, start_type, ready,
                                     mem_mult)
         if self._dispatch_subs or self._emit_all:
@@ -429,6 +506,8 @@ class ControlPlane:
         dev.note_dispatch(inv.inv_id, fn_id, spec)
         self._agg_dirty = True
         self._dev_util[dev.slot] = dev.utilization()
+        if self._injector is not None:
+            self._inflight_inv[inv.inv_id] = inv
         decision = DispatchDecision(inv, dev, spec, start_type, ready,
                                     mem_mult)
         if self._dispatch_subs or self._emit_all:
@@ -459,9 +538,206 @@ class ControlPlane:
             self.fairness.on_backlog_change(fn_id, False)
             if not policy.anticipatory:
                 dev.mem.on_queue_idle(fn_id, now)
+        inj = self._injector
+        if inj is not None:
+            self._inflight_inv.pop(inv.inv_id, None)
+            if inv.failed:
+                inj.completed_failed += 1
+            else:
+                inj.completed_ok += 1
         if self._complete_subs or self._emit_all:
             self.bus.emit_complete(
                 CompleteEvent(inv, fn_id, inv.device_id, now))
+
+    # -- fault recovery (repro.faults, ISSUE 9) -----------------------------------
+    # The executor owns fault *timing* (sim: fault events; wallclock:
+    # watchdog thread + wrapper endpoint); the control plane owns the
+    # *accounting*: a failed attempt must leave every ledger — VT,
+    # fairness service, D tokens, warm pool, memory, device demand — as
+    # if the dispatch had been charged exactly once per completing
+    # attempt. ``on_attempt_failed`` reverts one attempt; ``requeue``
+    # re-inserts the invocation at the front of its flow queue.
+
+    def device_state(self, dev_id: int) -> DeviceState:
+        return self.devices[dev_id - self._dev_base]
+
+    def inflight_on(self, dev_id: int) -> List[Invocation]:
+        """In-flight invocation records on a device (faults only — the
+        tracking dict is populated only when an injector is active)."""
+        dev = self.devices[dev_id - self._dev_base]
+        inflight = self._inflight_inv
+        return [inflight[i] for i in dev.running if i in inflight]
+
+    def fail_device(self, dev_id: int, now: float) -> List[Invocation]:
+        """Take a device out of rotation: quarantine it, purge sticky
+        placements, drop its in-flight transfers and invalidate every
+        resident region (weights on a dead device are gone; the warm
+        containers are host-side processes and survive). Returns the
+        doomed in-flight invocations — the *executor* fails each one
+        (sim: immediately, cancelling their completion events; wallclock:
+        lazily when the worker thread returns)."""
+        dev = self.devices[dev_id - self._dev_base]
+        inj = self._injector
+        inj.device_faults += 1
+        if dev.failed:
+            return []
+        doomed = self.inflight_on(dev_id)
+        if not self._recovery:
+            return doomed        # naive platform: no reaction at all
+        dev.failed = True
+        dev.quarantined_until = now + self.quarantine_s
+        inj.quarantined += 1
+        slot = dev.slot
+        stale = [fn for fn, s in self._sticky_dev.items() if s == slot]
+        for fn in stale:
+            del self._sticky_dev[fn]
+        if dev.datapath is not None:
+            dev.datapath.abort_all(now)
+        dev.mem.invalidate_device()
+        return doomed
+
+    def readmit_device(self, dev_id: int, now: float) -> Optional[float]:
+        """Health check: re-admit a quarantined device once its fault
+        window cleared AND ``quarantine_s`` has passed since failure.
+        Returns the next re-check time when the device is still down
+        (None when re-admitted, or down permanently)."""
+        dev = self.devices[dev_id - self._dev_base]
+        if not dev.failed:
+            return None
+        inj = self._injector
+        end = inj.device_fault_end(dev.dev_id, now)
+        if end == float("inf"):
+            return None                       # permanent: never re-admit
+        due = max(end, dev.quarantined_until)
+        if due > now:
+            return due
+        dev.failed = False
+        inj.readmitted += 1
+        return None
+
+    def on_attempt_failed(self, inv: Invocation, now: float,
+                          reason: str) -> Optional[float]:
+        """Undo one failed attempt's dispatch accounting and decide its
+        fate: returns the retry time (schedule a ``requeue`` then), or
+        None — the invocation is dropped (budget/deadline exhausted) and
+        ``inv.failed`` is set.
+
+        ``reason``: "error" (endpoint raised — container process is
+        fine, released back to the pool), "hang" (watchdog killed the
+        container — destroyed), "device" (device died — the host-side
+        container survives, but its device state is gone)."""
+        inj = self._injector
+        inj.attempts_failed += 1
+        fn_id = inv.fn_id
+        dev = self.devices[inv.device_id - self._dev_base]
+        dev.note_complete(inv.inv_id, fn_id, self.fns[fn_id])
+        self._agg_dirty = True
+        self._dev_util[dev.slot] = dev.utilization()
+        dev.tokens.release()
+        self._inflight_inv.pop(inv.inv_id, None)
+        container = self._containers.pop(inv.inv_id, None)
+        if container is not None:
+            if reason == "hang":
+                self.pool.destroy(container)
+            else:
+                self.pool.release(container, now)
+        policy = self.policy
+        q = policy.get_queue(fn_id)
+        policy.on_failure(q, inv, now)
+        if not q.backlogged:
+            self._backlogged.discard(fn_id)
+            self.fairness.on_backlog_change(fn_id, False)
+            if not policy.anticipatory:
+                dev.mem.on_queue_idle(fn_id, now)
+        if inv.retries < self._retry_max:
+            backoff = self._retry_backoff * (2.0 ** inv.retries)
+            retry_at = now + backoff
+            if retry_at - inv.arrival <= self._retry_deadline:
+                inv.retries += 1
+                inj.retries += 1
+                return retry_at
+        inv.failed = True
+        inv.completion = now        # terminal: dropped, not stranded
+        inj.dropped += 1
+        return None
+
+    def requeue(self, inv: Invocation, now: float) -> None:
+        """Re-insert a retried invocation at the FRONT of its flow queue
+        (seniority preserved — its VT charge was reverted, so the flow
+        is not double-charged when the retry dispatches)."""
+        fn_id = inv.fn_id
+        q = self.policy.get_queue(fn_id)
+        q.pending.appendleft(inv)
+        self.pending_count += 1
+        self._backlogged.add(fn_id)
+        self._injector.requeued += 1
+        self.policy.on_requeue(q, now)
+        if not self.policy.anticipatory:
+            dev = self._fn_device(fn_id)
+            dev.mem.on_queue_active(fn_id, self.fns[fn_id].mem_bytes, now)
+
+    def abort_transfers(self, dev_id: int, fn_id: Optional[str],
+                        now: float) -> int:
+        """Injected transfer fault: abort the in-flight H2D transfer(s).
+        Under recovery the transfer restarts from zero progress (its
+        dispatch waiters stay attached and simply see a later
+        completion); without recovery the bytes are lost — waiters are
+        failed (``t_done=None``) and the region is dropped."""
+        dev = self.devices[dev_id - self._dev_base]
+        dp = dev.datapath
+        if dp is None:
+            return 0
+        targets = [fn_id] if fn_id is not None else list(dp.transfers)
+        n = 0
+        for fn in targets:
+            if dp.abort(fn, now, retry=self._recovery):
+                n += 1
+        self._injector.transfer_aborts += n
+        return n
+
+    # -- SLO-aware degraded mode --------------------------------------------------
+    def _predict_delay(self, now: float) -> float:
+        """Predicted queueing delay: total expected queued work over the
+        healthy fleet's parallel capacity. O(F), refreshed at most every
+        50 ms of driver time."""
+        if now - self._shed_checked < 0.05:
+            return self._pred_delay
+        self._shed_checked = now
+        work = 0.0
+        for q in self.policy.queues.values():
+            if q.pending:
+                work += len(q.pending) * q.tau
+        cap = 0
+        for d in self.devices:
+            if not d.failed:
+                cap += d.tokens.current_d
+        self._pred_delay = work / cap if cap else float("inf")
+        return self._pred_delay
+
+    def _maybe_shed(self, inv: Invocation, now: float) -> bool:
+        """Degraded-mode load shedding, per-tenant-fair: once predicted
+        delay crosses the threshold (hysteresis: exits at half of it),
+        reject newest arrivals of flows already at-or-over their fair
+        share of the backlog; flows under their share keep getting in.
+        Retries never pass through here — only fresh arrivals shed."""
+        delay = self._predict_delay(now)
+        thr = self._shed_threshold
+        if self._degraded:
+            if delay < 0.5 * thr:
+                self._degraded = False
+        elif delay >= thr:
+            self._degraded = True
+        if not self._degraded:
+            return False
+        q = self.policy.queues.get(inv.fn_id)
+        qlen = len(q.pending) if q is not None else 0
+        n_backlogged = len(self._backlogged)
+        fair = max(1, -(-self.pending_count // max(n_backlogged, 1)))
+        if qlen < fair:
+            return False
+        inv.shed = True
+        self._injector.shed += 1
+        return True
 
     # -- cold-start data plane (datapath="pipeline") ------------------------------
     def datapath_tick(self, now: float) -> None:

@@ -31,6 +31,7 @@ from concurrent.futures import ThreadPoolExecutor
 from typing import Dict, List, Optional
 
 from repro.core.flow import QueueState
+from repro.faults import FaultError
 from repro.runtime.invocation import Invocation
 from repro.server.control import ControlPlane, DispatchDecision
 from repro.server.events import EventBus
@@ -55,6 +56,10 @@ class SimExecutor:
     materialize-all-arrivals-first heap produced."""
 
     ARRIVAL, COMPLETE, TIMER, TRANSFER = 0, 1, 2, 3
+    # fault plane (repro.faults): injected fault deliveries and the
+    # recovery events they spawn, ordered after the regular kinds so at
+    # equal timestamps real work settles before faults land
+    DEV_FAULT, XFER_FAULT, ATTEMPT_FAIL, RETRY, HEALTH = 4, 5, 6, 7, 8
 
     def __init__(self, control: ControlPlane, config):
         self.control = control
@@ -78,6 +83,17 @@ class SimExecutor:
             # instance attr shadows the method: the fast loop binds
             # ``self._realize`` once, so scalar mode pays no branch
             self._realize = self._realize_pipeline
+        # fault plane: wrap whatever realize is bound (scalar or
+        # pipeline) so the fault-free path keeps its exact callable and
+        # runs bit-identical when no injector is configured
+        self._injector = getattr(control, "injector", None)
+        self._recovery = bool(getattr(config, "recovery", True))
+        # inv_id -> count of COMPLETE events in the heap that belong to
+        # attempts doomed by a device fault; popped as pure no-ops
+        self._stale: Dict[int, int] = {}
+        if self._injector is not None:
+            self._realize_inner = self._realize
+            self._realize = self._realize_faulty
         self._heap: List = []
         self._seq = itertools.count()
         self._n_arrived = 0
@@ -122,6 +138,17 @@ class SimExecutor:
                 "datapath='pipeline' requires the fast event loop "
                 "(batch_dispatch=True, sampling='transition'): the "
                 "reference loops carry no TRANSFER events")
+        inj = self._injector
+        if inj is not None:
+            if not (self.batch and self._transition):
+                raise ValueError(
+                    "fault injection requires the fast event loop "
+                    "(batch_dispatch=True, sampling='transition'); the "
+                    "reference loops carry no fault events")
+            for f in inj.plan.device_faults:
+                self._push(f.t, self.DEV_FAULT, f)
+            for tf in inj.plan.transfer_faults:
+                self._push(tf.t, self.XFER_FAULT, tf)
         it = iter(trace)
         self._pull_arrival(it)
         now = 0.0
@@ -131,7 +158,8 @@ class SimExecutor:
             now = self._run_reference(it, now)
         return RunResult(cp.policy.name, self.invocations, cp.fairness,
                          cp.pool, cp.util_samples, cp.devices, now,
-                         stats=self.stats, util_integral=cp.util_integral)
+                         stats=self.stats, util_integral=cp.util_integral,
+                         faults=inj.snapshot() if inj is not None else None)
 
     def _run_fast(self, it, now: float) -> float:
         """Allocation-light event loop: the batched drain is inlined as a
@@ -158,6 +186,7 @@ class SimExecutor:
         ARRIVAL, COMPLETE, TIMER = self.ARRIVAL, self.COMPLETE, self.TIMER
         TRANSFER = self.TRANSFER
         pipeline = self._pipeline
+        stale = self._stale
         events = 0
         while heap:
             now, kind, _, payload = pop(heap)
@@ -168,14 +197,24 @@ class SimExecutor:
                 on_arrival(payload, now)
                 pull(it)
             elif kind == COMPLETE:
+                if stale:       # device fault doomed this attempt: the
+                    n = stale.get(payload.inv_id)   # event is a no-op
+                    if n is not None:
+                        if n == 1:
+                            del stale[payload.inv_id]
+                        else:
+                            stale[payload.inv_id] = n - 1
+                        continue
                 on_complete(payload, now)
-                if record is not None:
+                if record is not None and not payload.failed:
                     record(payload)
             elif kind == TIMER:         # queue-state housekeeping
                 armed.pop()             # fired timers pop in LIFO order
-            else:                       # TRANSFER: link completions
+            elif kind == TRANSFER:      # link completions
                 self._xfer_armed = None
                 cp.advance_transfers(now)
+            else:                       # fault plane
+                self._handle_fault(kind, payload, now)
             while True:
                 d = dispatch_once(now)
                 if d is None:
@@ -305,7 +344,10 @@ class SimExecutor:
             floor = now + fixed
 
             def finish(t_done, inv=inv, now=now, floor=floor,
-                       service=service, dev=dev):
+                       service=service, dev=dev, dp=dp):
+                if t_done is None:      # transfer aborted (fault plane,
+                    self._finish_failed(inv, dp.now, dp.now, dev)
+                    return              # recovery off): attempt fails
                 self._finish_realize(
                     inv, now, t_done if t_done > floor else floor,
                     service, dev)
@@ -329,6 +371,87 @@ class SimExecutor:
         heapq.heappush(self._heap,
                        (inv.completion, self.COMPLETE, next(self._seq),
                         inv))
+
+    # -- fault plane --------------------------------------------------------
+    def _realize_faulty(self, d: DispatchDecision, now: float) -> None:
+        """Realize wrapper installed when a ``FaultInjector`` is
+        configured: consults the endpoint-fault schedule (nth execution
+        attempt per fn, counted across retries — the one trigger that is
+        deterministic under both clocks) before handing off to the real
+        realize. With recovery on, a faulty attempt becomes an
+        ATTEMPT_FAIL event at the fault's manifestation time; with
+        recovery off it "completes" as a failure through the normal
+        COMPLETE path — the naive reference platform."""
+        inj = self._injector
+        inv = d.inv
+        if not self._recovery and inj.device_down(d.device.dev_id, now):
+            # naive platform: the down device stays in rotation and
+            # fail-fasts everything dispatched to it
+            self._finish_failed(inv, now, now, d.device)
+            return
+        f = inj.next_endpoint_fault(inv.fn_id)
+        if f is not None:
+            t_fail = now + (f.latency if f.latency > 0.0 else 0.0)
+            if self._recovery:
+                self._push(t_fail, self.ATTEMPT_FAIL, (inv, f.mode))
+            else:
+                self._finish_failed(inv, now, t_fail, d.device)
+            return
+        self._realize_inner(d, now)
+
+    def _finish_failed(self, inv: Invocation, now: float, t_fail: float,
+                       dev) -> None:
+        """Recovery-off reference: the attempt terminates as a failed
+        completion through the ordinary COMPLETE machinery, so every
+        resource/fairness hook runs exactly as for a success (including
+        the tau-EMA pollution a naive platform suffers)."""
+        inv.failed = True
+        inv.overhead = 0.0
+        inv.exec_start = now
+        inv.service_time = t_fail - now
+        inv.completion = t_fail
+        dev.busy_time += t_fail - now
+        heapq.heappush(self._heap,
+                       (t_fail, self.COMPLETE, next(self._seq), inv))
+
+    def _handle_fault(self, kind: int, payload, now: float) -> None:
+        cp = self.control
+        if kind == self.DEV_FAULT:
+            f = payload
+            doomed = cp.fail_device(f.dev_id, now)
+            if self._recovery:
+                if doomed:
+                    # only attempts with a COMPLETE already in the heap
+                    # are stale-marked: a transfer-waiting attempt has
+                    # none, and wrongly marking it would swallow its
+                    # retry's completion
+                    ids = {inv.inv_id for inv in doomed}
+                    pending = set()
+                    for _, k, _, p in self._heap:
+                        if k == self.COMPLETE and p.inv_id in ids:
+                            pending.add(p.inv_id)
+                    for iid in pending:
+                        self._stale[iid] = self._stale.get(iid, 0) + 1
+                    for inv in doomed:
+                        rt = cp.on_attempt_failed(inv, now, "device")
+                        if rt is not None:
+                            self._push(rt, self.RETRY, inv)
+                if f.duration != float("inf"):
+                    self._push(max(now + cp.quarantine_s,
+                                   f.t + f.duration), self.HEALTH, f.dev_id)
+        elif kind == self.XFER_FAULT:
+            cp.abort_transfers(payload.dev_id, payload.fn_id, now)
+        elif kind == self.ATTEMPT_FAIL:
+            inv, mode = payload
+            rt = cp.on_attempt_failed(inv, now, mode)
+            if rt is not None:
+                self._push(rt, self.RETRY, inv)
+        elif kind == self.RETRY:
+            cp.requeue(payload, now)
+        else:                           # HEALTH: quarantine re-admission
+            t = cp.readmit_device(payload, now)
+            if t is not None:
+                self._push(t, self.HEALTH, payload)
 
     def run_profiled(self, trace) -> RunResult:
         """``run`` with a per-event cost breakdown (benchmarks.scale
@@ -354,6 +477,10 @@ class SimExecutor:
                 "run_profiled does not support datapath='pipeline' "
                 "(its loop carries no TRANSFER events); profile the "
                 "scalar datapath instead")
+        if self._injector is not None:
+            raise ValueError(
+                "run_profiled does not support fault injection (its "
+                "loop carries no fault events); profile fault-free")
         clock = time.perf_counter_ns
         ns = self.event_ns = {k: 0 for k in (
             "heap", "arrival", "complete", "dispatch", "sample", "timer",
@@ -462,6 +589,15 @@ class WallClockExecutor:
         self.completed: List[Invocation] = []
         self._inflight = 0
         self._ids = itertools.count() if id_counter is None else id_counter
+        # fault plane: a device-fault watchdog mirrors the sim's
+        # DEV_FAULT/HEALTH events onto the wall clock; failed attempts
+        # park on a retry heap the dispatcher drains when due
+        self._injector = getattr(control, "injector", None)
+        self._recovery = bool(getattr(config, "recovery", True))
+        self._retry_heap: List = []        # (due, inv_id, inv)
+        self._pending_retries = 0
+        self._doomed: set = set()          # inv_ids doomed by device fault
+        self._watchdog: Optional[threading.Thread] = None
         # control-plane events -> real data movement
         if subscribe_state:
             control.bus.on_state_change(self._on_state_change)
@@ -509,6 +645,8 @@ class WallClockExecutor:
             inv = Invocation(fn_id, self.now(), inv_id=next(self._ids))
             inv.request = request  # type: ignore[attr-defined]
             self.control.on_arrival(inv, inv.arrival)
+            if inv.shed:        # degraded mode rejected it at the door
+                self.completed.append(inv)
             self.control.sample(inv.arrival)
         self._wake.set()
         return inv
@@ -516,37 +654,123 @@ class WallClockExecutor:
     def start(self) -> None:
         self._dispatcher = threading.Thread(target=self._run, daemon=True)
         self._dispatcher.start()
+        inj = self._injector
+        if inj is not None and inj.plan.device_faults and self._recovery:
+            self._watchdog = threading.Thread(target=self._watchdog_loop,
+                                              daemon=True)
+            self._watchdog.start()
 
     def drain(self, timeout: float = 300.0) -> None:
-        """Block until no work is pending or in flight. Waits on the
-        completion condition variable (the old implementation polled at
-        10 ms, burning a core for the length of any long real run)."""
+        """Block until no work is pending, in flight, or parked for
+        retry. Waits on the completion condition variable (the old
+        implementation polled at 10 ms, burning a core for the length of
+        any long real run). On timeout the executor is torn down — stop
+        event set, dispatcher joined, worker pool released — *before*
+        ``TimeoutError`` propagates, so a wedged run does not leak
+        threads that keep dispatching behind the caller's back."""
         deadline = time.monotonic() + timeout
+        timed_out = False
         with self._idle:
-            while self.control.total_pending != 0 or self._inflight != 0:
+            while (self.control.total_pending != 0 or self._inflight != 0
+                   or self._pending_retries != 0):
                 remaining = deadline - time.monotonic()
                 if remaining <= 0:
-                    raise TimeoutError("engine did not drain")
+                    timed_out = True
+                    break
                 self._idle.wait(remaining)
+        if timed_out:
+            self._stop.set()
+            self._wake.set()
+            if self._dispatcher is not None:
+                self._dispatcher.join(timeout=5)
+            if self._watchdog is not None:
+                self._watchdog.join(timeout=5)
+            self._pool.shutdown(wait=False, cancel_futures=True)
+            raise TimeoutError("engine did not drain")
 
     def stop(self) -> RunResult:
         self._stop.set()
         self._wake.set()
         if self._dispatcher:
             self._dispatcher.join(timeout=10)
+        if self._watchdog is not None:
+            self._watchdog.join(timeout=10)
         self._pool.shutdown(wait=True)
         cp = self.control
+        inj = self._injector
         return RunResult(cp.policy.name, list(self.completed), cp.fairness,
                          cp.pool, cp.util_samples, cp.devices, self.now(),
-                         util_integral=cp.util_integral)
+                         util_integral=cp.util_integral,
+                         faults=inj.snapshot() if inj is not None else None)
 
     # -- dispatcher ---------------------------------------------------------------
     def _run(self) -> None:
         while not self._stop.is_set():
+            if self._retry_heap:        # unlocked peek: worst case the
+                self._drain_retries()   # retry waits one 50 ms pass
             dispatched = self._dispatch_batch()
             if not dispatched:
                 self._wake.wait(timeout=0.05)
                 self._wake.clear()
+
+    def _drain_retries(self) -> None:
+        with self._lock:
+            now = self.now()
+            while self._retry_heap and self._retry_heap[0][0] <= now:
+                _, _, inv = heapq.heappop(self._retry_heap)
+                self.control.requeue(inv, now)
+                self._pending_retries -= 1
+
+    # -- fault plane --------------------------------------------------------
+    def _watchdog_loop(self) -> None:
+        """Mirror of the sim's DEV_FAULT/HEALTH events: apply device
+        faults from the shared plan when due, doom their in-flight
+        attempts (threads cannot be cancelled — the worker routes to the
+        failure path when it returns), and re-admit quarantined devices
+        once healthy."""
+        cp = self.control
+        faults = sorted(self._injector.plan.device_faults,
+                        key=lambda f: f.t)
+        i = 0
+        health: List = []               # (due, dev_id) min-heap
+        while not self._stop.is_set():
+            now = self.now()
+            while i < len(faults) and faults[i].t <= now:
+                f = faults[i]
+                i += 1
+                with self._lock:
+                    doomed = cp.fail_device(f.dev_id, now)
+                    self._doomed.update(inv.inv_id for inv in doomed)
+                if f.duration != float("inf"):
+                    heapq.heappush(health,
+                                   (max(now + cp.quarantine_s,
+                                        f.t + f.duration), f.dev_id))
+                self._wake.set()
+            while health and health[0][0] <= now:
+                due, dev_id = heapq.heappop(health)
+                with self._lock:
+                    t = cp.readmit_device(dev_id, now)
+                if t is not None:
+                    heapq.heappush(health, (t, dev_id))
+                    break               # not due yet: wait it out
+                self._wake.set()
+            if i >= len(faults) and not health:
+                return
+            self._stop.wait(0.02)
+
+    def _fail_attempt(self, inv: Invocation, mode: str) -> None:
+        with self._lock:
+            now = self.now()
+            rt = self.control.on_attempt_failed(inv, now, mode)
+            if rt is not None:
+                heapq.heappush(self._retry_heap, (rt, inv.inv_id, inv))
+                self._pending_retries += 1
+            else:                       # retry budget exhausted: dropped
+                self.completed.append(inv)
+            self.control.sample(now)
+            self._inflight -= 1
+            self._idle.notify_all()
+        self._wake.set()
 
     def _realize_decision(self, decision) -> None:
         """Hand one decision to the worker pool (hoisted out of
@@ -572,31 +796,57 @@ class WallClockExecutor:
     def _execute(self, d: DispatchDecision) -> None:
         inv = d.inv
         ep = self.endpoints[inv.fn_id]
+        inj = self._injector
+        fault: Optional[str] = None
         try:
-            overhead0 = self.now()
-            with ep.lock:  # one container instance: run-to-completion
-                # reconcile reality with the control plane's decision:
-                # cold -> compile (+upload), host_warm/warm -> ensure
-                # weights are on device (prefetch may still be in flight)
-                if not ep.compiled:
-                    ep.compile()
-                elif not ep.resident:
-                    ep.upload()
-                ep.last_use = self.now()
-                inv.exec_start = self.now()
-                inv.overhead = inv.exec_start - overhead0
-                out = ep.execute(getattr(inv, "request", None))
-                inv.service_time = out["exec_s"]
+            try:
+                if inj is not None and not self._recovery \
+                        and inj.device_down(d.device.dev_id, self.now()):
+                    # naive reference platform: the down device stays in
+                    # rotation and fail-fasts everything sent to it
+                    inv.exec_start = self.now()
+                    inv.overhead = 0.0
+                    inv.service_time = 0.0
+                    raise FaultError(inv.fn_id, "device")
+                overhead0 = self.now()
+                with ep.lock:  # one container instance: run-to-completion
+                    # reconcile reality with the control plane's decision:
+                    # cold -> compile (+upload), host_warm/warm -> ensure
+                    # weights are on device (prefetch may still be in flight)
+                    if not ep.compiled:
+                        ep.compile()
+                    elif not ep.resident:
+                        ep.upload()
+                    ep.last_use = self.now()
+                    inv.exec_start = self.now()
+                    inv.overhead = inv.exec_start - overhead0
+                    out = ep.execute(getattr(inv, "request", None))
+                    inv.service_time = out["exec_s"]
+            except FaultError as e:
+                fault = e.mode
+                if inv.service_time is None:
+                    inv.service_time = 0.0
         finally:
-            with self._lock:
-                now = self.now()
-                inv.completion = now
-                self.completed.append(inv)
-                self.control.on_complete(inv, now)
-                self.control.sample(now)
-                self._inflight -= 1
-                self._idle.notify_all()
-            self._wake.set()
+            if inj is not None:
+                with self._lock:
+                    if inv.inv_id in self._doomed:
+                        self._doomed.discard(inv.inv_id)
+                        if fault is None:
+                            fault = "device"
+            if fault is not None and self._recovery:
+                self._fail_attempt(inv, fault)
+            else:
+                if fault is not None:
+                    inv.failed = True
+                with self._lock:
+                    now = self.now()
+                    inv.completion = now
+                    self.completed.append(inv)
+                    self.control.on_complete(inv, now)
+                    self.control.sample(now)
+                    self._inflight -= 1
+                    self._idle.notify_all()
+                self._wake.set()
 
 
 class ShardedWallClockExecutor:
@@ -699,9 +949,12 @@ class ShardedWallClockExecutor:
             r.util_integral * len(r.devices) for r in results
         ) / max(sh._n_dev, 1)
         duration = max((r.duration for r in results), default=0.0)
+        inj = getattr(sh, "injector", None)
         return RunResult(sh.policy.name, invocations, sh.fairness,
                          sh.pool, [], sh.devices, duration,
-                         util_integral=util_integral)
+                         util_integral=util_integral,
+                         faults=inj.snapshot() if inj is not None else None,
+                         vt_sync_errors=sh.vt_sync_errors)
 
     @property
     def completed(self) -> List[Invocation]:

@@ -173,12 +173,16 @@ class RunResult:
     # per-event sample trace
     stats: Optional[StreamingStats] = None
     util_integral: float = 0.0
+    # fault plane (repro.faults): injector counter snapshot when the run
+    # had a FaultPlan, else None; cross-shard VT epochs that raised
+    faults: Optional[object] = None       # FaultStats
+    vt_sync_errors: int = 0
 
     # -- latency ------------------------------------------------------------
     def mean_latency(self) -> float:
         if not self.invocations and self.stats is not None:
             return self.stats.mean_latency()
-        done = [i for i in self.invocations if i.done]
+        done = [i for i in self.invocations if i.done and not i.failed]
         return statistics.fmean(i.latency for i in done) if done else 0.0
 
     def per_fn_latency(self) -> Dict[str, List[float]]:
@@ -208,7 +212,8 @@ class RunResult:
     def latency_quantile(self, q: float) -> float:
         if not self.invocations and self.stats is not None:
             return self.stats.quantile(q)
-        lats = sorted(i.latency for i in self.invocations if i.done)
+        lats = sorted(i.latency for i in self.invocations
+                      if i.done and not i.failed)
         return nearest_rank(lats, q)
 
     def latency_quantiles(self, qs: Sequence[float]) -> List[float]:
@@ -217,7 +222,8 @@ class RunResult:
         if not self.invocations and self.stats is not None:
             lats = sorted(self.stats._reservoir)
         else:
-            lats = sorted(i.latency for i in self.invocations if i.done)
+            lats = sorted(i.latency for i in self.invocations
+                          if i.done and not i.failed)
         return [nearest_rank(lats, q) for q in qs]
 
     def p50_latency(self) -> float:
@@ -237,7 +243,7 @@ class RunResult:
             return self.stats.slo_attainment(slo_s)
         done = tot = 0
         for i in self.invocations:
-            if i.done:
+            if i.done and not i.failed:
                 tot += 1
                 if i.latency <= slo_s:
                     done += 1
@@ -280,3 +286,52 @@ class RunResult:
         if not self.invocations and self.stats is not None:
             return self.stats.n
         return sum(1 for i in self.invocations if i.done)
+
+    # -- fault plane ----------------------------------------------------------
+    @property
+    def failed_count(self) -> int:
+        return sum(1 for i in self.invocations if i.failed)
+
+    @property
+    def shed_count(self) -> int:
+        return sum(1 for i in self.invocations if i.shed)
+
+    def goodput(self) -> float:
+        """Fraction of arrivals that completed *successfully*. Under
+        fault injection this is exact from the injector's counters
+        (shed, dropped, and failed-completed arrivals all count against
+        it); fault-free full-metrics runs derive it from the records;
+        fault-free lean runs are 1.0 by construction."""
+        f = self.faults
+        if f is not None and f.arrivals:
+            return f.completed_ok / f.arrivals
+        if not self.invocations:
+            return 1.0
+        ok = sum(1 for i in self.invocations
+                 if i.done and not i.failed and not i.shed)
+        return ok / len(self.invocations)
+
+    def phase_quantiles(self, qs: Sequence[float]
+                        ) -> Dict[str, List[float]]:
+        """Per-phase tails over successful completions: queue wait
+        (arrival -> dispatch), overhead (dispatch -> exec start),
+        service, and end-to-end latency. Requires full invocation
+        records (lean runs keep only end-to-end latency)."""
+        phases: Dict[str, List[float]] = {
+            "queue": [], "overhead": [], "service": [], "latency": []}
+        for i in self.invocations:
+            if not i.done or i.failed or i.shed:
+                continue
+            ov = i.overhead if i.overhead is not None else 0.0
+            if i.exec_start is not None:
+                w = i.exec_start - ov - i.arrival
+                phases["queue"].append(w if w > 0.0 else 0.0)
+            phases["overhead"].append(ov)
+            phases["service"].append(
+                i.service_time if i.service_time is not None else 0.0)
+            phases["latency"].append(i.latency)
+        out: Dict[str, List[float]] = {}
+        for k, v in phases.items():
+            v.sort()
+            out[k] = [nearest_rank(v, q) for q in qs]
+        return out

@@ -250,13 +250,22 @@ class ShardedControlPlane:
         self.bus = bus or EventBus()
         group = config.n_devices // S
         self._group = group
+        # fault plane: ONE injector shared by every shard, so the
+        # fault schedule and its counters are global (a per-shard
+        # injector would replay the same endpoint faults S times)
+        plan = getattr(config, "faults", None)
+        injector = None
+        if plan is not None:
+            from repro.faults import FaultInjector
+            injector = FaultInjector(plan)
+        self.injector = injector
         base_pool, extra = divmod(config.pool_size, S)
         self.shards: List[ControlPlane] = []
         for k in range(S):
             sub = replace(config, n_devices=group,
                           pool_size=base_pool + (1 if k < extra else 0))
             shard = ControlPlane(policy_factory(), fns, sub, self.bus,
-                                 dev_base=k * group)
+                                 dev_base=k * group, injector=injector)
             # the merged plane records the utilization trace; the
             # per-shard lists would be dead weight nobody reads
             # (O(events) tuples per shard on full-metrics runs) —
@@ -463,6 +472,39 @@ class ShardedControlPlane:
             self._prev_floor = floor
         self.vt_syncs += 1
         self._last_sync = now
+
+    # -- fault plane --------------------------------------------------------------
+    # Thin routing over the owning shard: device-scoped calls go by
+    # device id, requeue by the flow's routed shard (the same map
+    # arrivals use, so a retry rejoins its own queue).
+    def device_state(self, dev_id: int):
+        return self.shard_of_device(dev_id).device_state(dev_id)
+
+    def inflight_on(self, dev_id: int) -> List[Invocation]:
+        return self.shard_of_device(dev_id).inflight_on(dev_id)
+
+    def fail_device(self, dev_id: int, now: float) -> List[Invocation]:
+        return self.shard_of_device(dev_id).fail_device(dev_id, now)
+
+    def readmit_device(self, dev_id: int, now: float) -> Optional[float]:
+        return self.shard_of_device(dev_id).readmit_device(dev_id, now)
+
+    def on_attempt_failed(self, inv: Invocation, now: float,
+                          reason: str) -> Optional[float]:
+        return self.shards[inv.device_id // self._group] \
+            .on_attempt_failed(inv, now, reason)
+
+    def requeue(self, inv: Invocation, now: float) -> None:
+        self.shards[self._route_fast(inv.fn_id)].requeue(inv, now)
+
+    def abort_transfers(self, dev_id: int, fn_id: Optional[str],
+                        now: float) -> int:
+        return self.shard_of_device(dev_id) \
+            .abort_transfers(dev_id, fn_id, now)
+
+    @property
+    def quarantine_s(self) -> float:
+        return self.shards[0].quarantine_s
 
     # -- aggregate views ---------------------------------------------------------
     @property

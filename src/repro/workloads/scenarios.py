@@ -59,6 +59,10 @@ class Scenario:
     # the fn_id's base-family prefix ("imagenet-3" -> "imagenet"); the
     # Azure replay loader fills it with the trace's HashOwner column.
     tenants: Optional[Dict[str, str]] = None
+    # seeded FaultPlan (repro.faults) for chaos-* variants; make_server
+    # adopts it into the ServerConfig so sim and wallclock replay the
+    # identical fault sequence. None = fault-free.
+    faults: Optional[object] = None
 
     def stream(self) -> Iterator[TraceEvent]:
         s = self.make_stream()
@@ -390,3 +394,104 @@ def zlib_frac(fn_id: str) -> float:
     """Stable per-function fraction in [0, 1) (phase staggering)."""
     import zlib
     return (zlib.crc32(fn_id.encode()) % 10_000) / 10_000.0
+
+
+# -- chaos variants (repro.faults) ------------------------------------------
+def _chaosify(base: Scenario, *, chaos_seed: int, horizon_s: float,
+              n_devices: int, device_faults: int, device_down_s: float,
+              permanent_devices: int, endpoint_fault_frac: float,
+              endpoint_faults_per_fn: int, endpoint_hang_frac: float,
+              transfer_faults: int) -> Scenario:
+    """Attach a seeded ``FaultPlan`` to an existing scenario: same
+    arrival process (same workload seed), plus a deterministic fault
+    schedule the server adopts via ``ServerConfig``."""
+    from repro.faults import FaultPlan
+    base.faults = FaultPlan.generate(
+        seed=chaos_seed, horizon_s=horizon_s, n_devices=n_devices,
+        fn_ids=list(base.fns), device_faults=device_faults,
+        device_down_s=device_down_s, permanent_devices=permanent_devices,
+        endpoint_fault_frac=endpoint_fault_frac,
+        endpoint_faults_per_fn=endpoint_faults_per_fn,
+        endpoint_hang_frac=endpoint_hang_frac,
+        transfer_faults=transfer_faults)
+    base.name = "chaos-" + base.name
+    base.description += (
+        f" + faults(seed={chaos_seed}: {device_faults} device, "
+        f"{permanent_devices} permanent, "
+        f"{endpoint_fault_frac:g} fn-frac endpoint, "
+        f"{transfer_faults} transfer)")
+    return base
+
+
+@scenario("chaos-azure-longtail")
+def chaos_azure_longtail(chaos_seed: int = 0, horizon_s: float = 120.0,
+                         n_devices: int = 4, device_faults: int = 2,
+                         device_down_s: float = 5.0,
+                         permanent_devices: int = 0,
+                         endpoint_fault_frac: float = 0.25,
+                         endpoint_faults_per_fn: int = 2,
+                         endpoint_hang_frac: float = 0.25,
+                         transfer_faults: int = 0, **kw) -> Scenario:
+    """``azure-longtail`` under fire: transient device outages plus
+    error/hang endpoint faults across a quarter of the functions.
+    ``horizon_s`` bounds where fault times land (the base stream has no
+    finite duration); ``n_devices`` must match the server's."""
+    return _chaosify(
+        azure_longtail(**kw), chaos_seed=chaos_seed, horizon_s=horizon_s,
+        n_devices=n_devices, device_faults=device_faults,
+        device_down_s=device_down_s, permanent_devices=permanent_devices,
+        endpoint_fault_frac=endpoint_fault_frac,
+        endpoint_faults_per_fn=endpoint_faults_per_fn,
+        endpoint_hang_frac=endpoint_hang_frac,
+        transfer_faults=transfer_faults)
+
+
+@scenario("chaos-cold-start-storm")
+def chaos_cold_start_storm(chaos_seed: int = 0,
+                           horizon_s: Optional[float] = None,
+                           n_devices: int = 4, device_faults: int = 1,
+                           device_down_s: float = 10.0,
+                           permanent_devices: int = 0,
+                           endpoint_fault_frac: float = 0.15,
+                           endpoint_faults_per_fn: int = 1,
+                           endpoint_hang_frac: float = 0.25,
+                           transfer_faults: int = 4, **kw) -> Scenario:
+    """``cold-start-storm`` with transfer aborts landing mid-wave (the
+    H2D pipeline's worst case) plus a device outage."""
+    base = cold_start_storm(**kw)
+    if horizon_s is None:
+        horizon_s = kw.get("duration", 900.0)
+    return _chaosify(
+        base, chaos_seed=chaos_seed, horizon_s=horizon_s,
+        n_devices=n_devices, device_faults=device_faults,
+        device_down_s=device_down_s, permanent_devices=permanent_devices,
+        endpoint_fault_frac=endpoint_fault_frac,
+        endpoint_faults_per_fn=endpoint_faults_per_fn,
+        endpoint_hang_frac=endpoint_hang_frac,
+        transfer_faults=transfer_faults)
+
+
+@scenario("chaos-flash-crowd")
+def chaos_flash_crowd(chaos_seed: int = 0,
+                      horizon_s: Optional[float] = None,
+                      n_devices: int = 4, device_faults: int = 1,
+                      device_down_s: float = 30.0,
+                      permanent_devices: int = 1,
+                      endpoint_fault_frac: float = 0.25,
+                      endpoint_faults_per_fn: int = 2,
+                      endpoint_hang_frac: float = 0.25,
+                      transfer_faults: int = 0, **kw) -> Scenario:
+    """``flash-crowd`` where a device dies for good near the spike: the
+    retry storm meets degraded capacity — the scenario the SLO-aware
+    shedding exists for."""
+    base = flash_crowd(**kw)
+    if horizon_s is None:
+        horizon_s = kw.get("duration", 600.0)
+    return _chaosify(
+        base, chaos_seed=chaos_seed, horizon_s=horizon_s,
+        n_devices=n_devices, device_faults=device_faults,
+        device_down_s=device_down_s, permanent_devices=permanent_devices,
+        endpoint_fault_frac=endpoint_fault_frac,
+        endpoint_faults_per_fn=endpoint_faults_per_fn,
+        endpoint_hang_frac=endpoint_hang_frac,
+        transfer_faults=transfer_faults)

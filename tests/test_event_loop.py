@@ -115,7 +115,9 @@ class TestInvocationSlots:
         tracemalloc.stop()
         per_inv = (after - before) / n
         assert len(invs) == n
-        assert per_inv < 260, f"{per_inv:.0f} B/invocation — slots lost?"
+        # 272 B measured with the fault-plane disposition slots
+        # (retries/shed/failed, +24 B); a lost __slots__ jumps to ~400 B.
+        assert per_inv < 290, f"{per_inv:.0f} B/invocation — slots lost?"
 
 
 class TestArmedTimerStack:
