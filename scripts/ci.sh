@@ -55,6 +55,23 @@ echo "== cold-start data-plane gate: anticipatory prefetch vs keep-alive-only on
 # must coexist with admission-driven eviction.
 python -m benchmarks.scale --sizes '' --flows 64 --datapath-compare 2000
 
+echo "== data plane v2 gate: p2p migration + chunked streaming + ttr placement vs host-only prefetch =="
+# the PR-10 gate: the full v2 arm against the PR-6 plane on a 4-device
+# llm storm, median-of-3-seeds steady cold-p99 ratio >= 1.3x (measured
+# ~14x — chunking floors the overhead at one chunk's transfer time),
+# then a chaos arm where device quarantines land mid-migration and the
+# run must drain with zero stranded bytes/invocations. Deterministic
+# sim: the median is across workload seeds, not machine noise.
+python -m benchmarks.scale --sizes '' --flows 64 --migrate-compare 3000
+
+echo "== placement gate: time-to-resident vs sticky picks on the contended storm =="
+# sticky vs time-to-resident device picks with the rest of v2 on in
+# both arms, at a link-contended operating point. Measured tail-neutral
+# to slightly ahead (ttr's contribution rides inside the v2 gate), so
+# this is a no-regression bound (median ratio >= 0.95) that also
+# records the measured delta to BENCH_scale.json.
+python -m benchmarks.scale --sizes '' --flows 64 --placement-compare 3000
+
 echo "== shard-scaling gate: 4 shard processes vs 1 on the wall-clock stub workload (best-of-4 pairs) =="
 # process-per-shard wall-clock sweep (1/2/4/8 shards, 8 devices total,
 # cross-shard VT floor via lock-free shared memory). Gated at

@@ -8,8 +8,9 @@ existing admit/acquire memory accounting. The scalar cold model stays
 verbatim as the differential reference (``datapath="scalar"``).
 """
 from repro.datapath.device import DeviceDataPath
-from repro.datapath.link import SharedLink, Transfer
+from repro.datapath.fabric import Fabric
+from repro.datapath.link import ReferenceSharedLink, SharedLink, Transfer
 from repro.datapath.stages import ColdStartStages, stages_for
 
-__all__ = ["ColdStartStages", "DeviceDataPath", "SharedLink", "Transfer",
-           "stages_for"]
+__all__ = ["ColdStartStages", "DeviceDataPath", "Fabric",
+           "ReferenceSharedLink", "SharedLink", "Transfer", "stages_for"]

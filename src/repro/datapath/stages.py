@@ -44,6 +44,15 @@ class ColdStartStages:
         what ``FunctionSpec.cold_init`` should say for these stages."""
         return self.setup_s + self.compile_s + self.weight_bytes / h2d_bw
 
+    def n_chunks(self, chunk_bytes) -> int:
+        """Pieces the weight transfer splits into under chunked layer
+        streaming (``ServerConfig.chunk_bytes``): execution starts when
+        the first piece lands. 1 when chunking is off or the weights
+        fit in a single chunk."""
+        if not chunk_bytes or chunk_bytes <= 0:
+            return 1
+        return max(1, -(-self.weight_bytes // int(chunk_bytes)))
+
 
 def stages_for(spec, h2d_bw: float) -> ColdStartStages:
     """Stages of ``spec``: its own ``stages`` field when the cost model

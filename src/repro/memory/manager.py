@@ -439,3 +439,20 @@ class DeviceMemoryManager:
     def is_resident(self, fn_id: str, now: float) -> bool:
         r = self.regions.get(fn_id)
         return bool(r and r.resident and r.upload_eta <= now)
+
+    def time_to_resident(self, fn_id: str, now: float) -> Optional[float]:
+        """Predicted seconds until fn's weights are usable here: 0.0
+        when resident, the remaining planned upload time when a transfer
+        is in flight with a finite eta, None when the caller must
+        estimate from the link model (region absent, or its transfer is
+        paused/staging-queued with no planned completion). Placement-bid
+        input for ``placement="time-to-resident"``."""
+        r = self.regions.get(fn_id)
+        if r is None or not r.resident:
+            return None
+        eta = r.upload_eta
+        if eta <= now:
+            return 0.0
+        if eta == float("inf"):
+            return None
+        return eta - now

@@ -105,6 +105,29 @@ class ServerConfig:
     prefetch: bool = False
     prefetch_depth: int = 4          # max background prefetches/device
     staging_bytes: int = 64 * GB     # pinned-host staging pool/device
+    # data plane v2 (pipeline only; defaults keep the PR-6 plane
+    # bit-identical):
+    #   p2p_bw      — peer-to-peer interconnect bandwidth (bytes/s per
+    #                 directed device pair, repro.datapath.fabric). When
+    #                 > 0, a cold start whose weights are resident in a
+    #                 peer's HBM streams them over the fabric link
+    #                 instead of host DRAM (source stays evictable;
+    #                 eviction mid-migration falls back to the host
+    #                 link, restarting from byte zero). 0 disables.
+    #   chunk_bytes — chunked layer streaming: execution starts once
+    #                 the first chunk_bytes of the weights land, the
+    #                 residual keeps streaming demand-class on the same
+    #                 link overlapped with execution. None disables
+    #                 (execution waits for the full transfer).
+    #   placement   — "sticky" is the PR-6 pick_device (residency
+    #                 first, then least-load); "time-to-resident" bids
+    #                 each free-token device by its predicted
+    #                 weights-ready time (resident=0, peer=queue+bytes/
+    #                 p2p_bw, host=staged link estimate), least-load
+    #                 breaking ties
+    p2p_bw: float = 0.0
+    chunk_bytes: Optional[int] = None
+    placement: str = "sticky"
     # fault injection + recovery (repro.faults, ISSUE 9). ``faults`` is
     # a fully-expanded FaultPlan (or None — the bit-identical fault-free
     # path). ``recovery=False`` keeps the naive platform as the
@@ -207,6 +230,27 @@ def make_server(config: ServerConfig, *,
         raise ValueError(
             "prefetch=True requires datapath='pipeline': the scalar "
             "plane has no background transfer machinery to prefetch on")
+    if config.placement not in ("sticky", "time-to-resident"):
+        raise ValueError(f"unknown placement {config.placement!r}; "
+                         f"expected 'sticky' or 'time-to-resident'")
+    if config.datapath != "pipeline":
+        if config.p2p_bw:
+            raise ValueError(
+                "p2p_bw > 0 requires datapath='pipeline': the scalar "
+                "plane has no transfer fabric to migrate weights over")
+        if config.chunk_bytes is not None:
+            raise ValueError(
+                "chunk_bytes requires datapath='pipeline': the scalar "
+                "plane has no chunked transfers to overlap")
+        if config.placement != "sticky":
+            raise ValueError(
+                "placement='time-to-resident' requires "
+                "datapath='pipeline': its bids are link-model transfer "
+                "estimates")
+    if config.chunk_bytes is not None and config.chunk_bytes <= 0:
+        raise ValueError("chunk_bytes must be a positive byte count")
+    if config.p2p_bw < 0:
+        raise ValueError("p2p_bw must be >= 0 (bytes/s; 0 disables)")
 
     def _validate_faults(cfg):
         plan = cfg.faults

@@ -169,6 +169,12 @@ class ControlPlane:
         self._pipeline = self.datapath_mode == "pipeline"
         self._prefetch_on = False
         self._prefetch_depth = getattr(config, "prefetch_depth", 4)
+        # data plane v2: peer-to-peer fabric + chunked layer streaming
+        # (both off by default — p2p_bw=0 / chunk_bytes=None keep the
+        # PR-6 host-only plane bit-identical)
+        self.fabric = None
+        self._p2p_bw = float(getattr(config, "p2p_bw", 0.0) or 0.0)
+        self.chunk_bytes = getattr(config, "chunk_bytes", None)
         if self._pipeline:
             if layer != "indexed":
                 raise ValueError(
@@ -177,15 +183,24 @@ class ControlPlane:
             from repro.datapath.device import DeviceDataPath
             self._prefetch_on = bool(getattr(config, "prefetch", False))
             staging = getattr(config, "staging_bytes", 64 * (1 << 30))
+            if self._p2p_bw > 0.0 and config.n_devices > 1:
+                from repro.datapath.fabric import Fabric
+                self.fabric = Fabric(self._p2p_bw)
             for dev in self.devices:
                 dp = DeviceDataPath(dev.dev_id, config.h2d_bw, staging,
-                                    dev.mem)
+                                    dev.mem, fabric=self.fabric)
                 dev.datapath = dp
                 dev.mem.uploader = self._make_uploader(dp)
                 # keep-alive-only baseline: no activation-time uploads,
                 # every transfer starts at dispatch on the critical path
                 dev.mem.anticipatory_upload = self._prefetch_on
                 dev.mem.evict_listeners.append(dp.on_region_evicted)
+                if self.fabric is not None:
+                    # migrations source through the normal residency
+                    # surface: when a source region leaves this HBM,
+                    # every migration reading it falls back to host
+                    dev.mem.evict_listeners.append(
+                        self._peer_evict_listener(dev.dev_id))
         T = getattr(policy, "T", 0.0)
         lean = getattr(config, "metrics", "full") == "lean"
         self.fairness = FairnessTracker(window=config.fairness_window, T=T,
@@ -287,6 +302,11 @@ class ControlPlane:
                 raise ValueError("faults= requires sampling='transition'")
             self._pick = self._pick_device_healthy
             self._fn_device = self._fn_device_healthy
+        # transfer-aware placement (data plane v2): bid every free-token
+        # device by its predicted weights-ready time. Bound last — it
+        # subsumes the fault-aware pick (failed devices never bid).
+        if getattr(config, "placement", "sticky") == "time-to-resident":
+            self._pick = self._pick_device_ttr
 
     # -- queue-state hooks -----------------------------------------------------
     def _on_state_change(self, q, old, new, now) -> None:
@@ -388,6 +408,56 @@ class ControlPlane:
             load = len(d.running)
             if best is None or load < best_load:
                 best, best_load = d, load
+        return best
+
+    def _pick_device_ttr(self, fn_id: str) -> Optional[DeviceState]:
+        """Time-to-resident placement (``placement="time-to-resident"``,
+        pipeline only): bid every healthy free-token device by when this
+        function's weights could be usable there —
+
+            resident            -> 0
+            upload in flight    -> its planned eta
+            absent              -> min(best peer migration estimate,
+                                       host link estimate)
+
+        with the peer estimate (queue + bytes)/p2p_bw over resident
+        non-failed sources and the host estimate (demand backlog +
+        bytes)/h2d_bw from the staged link model. Least-load breaks
+        ties (first device wins, matching the sticky pick's stable
+        min), so a near-idle device mid-transfer stops beating a peer
+        that can serve from HBM."""
+        spec = self.fns[fn_id]
+        nbytes = spec.mem_bytes
+        fabric = self.fabric
+        p2p = self._p2p_bw
+        best: Optional[DeviceState] = None
+        best_key = None
+        for d in self.devices:
+            if d.failed:
+                continue
+            t = d.tokens
+            if t.outstanding >= t.current_d:
+                continue
+            dp = d.datapath
+            now = dp.now
+            ready = d.mem.time_to_resident(fn_id, now)
+            if ready is None:
+                # absent (or paused with no planned eta): estimate the
+                # cheapest way to get the bytes there
+                link = dp.link
+                ready = (link.backlog_bytes() + nbytes) / link.bw
+                if fabric is not None:
+                    for s in self.devices:
+                        if s is d or s.failed:
+                            continue
+                        if s.mem.is_resident(fn_id, now):
+                            est = (fabric.backlog_bytes(s.dev_id, d.dev_id)
+                                   + nbytes) / p2p
+                            if est < ready:
+                                ready = est
+            key = (ready, len(d.running))
+            if best is None or key < best_key:
+                best, best_key = d, key
         return best
 
     # -- pipeline: dispatch -----------------------------------------------------
@@ -753,14 +823,58 @@ class ControlPlane:
         link serves background prefetches one at a time in this order,
         so uploads complete in the order the policy will drain the
         flows; queue creation order (``q.ins``) is the policy's stable
-        candidate tie-break and survives across Inactive/Active cycles."""
+        candidate tie-break and survives across Inactive/Active cycles.
+
+        With a fabric wired, the hook routes through ``_peer_source``
+        first: weights already resident in a peer's HBM stream over the
+        interconnect instead of host DRAM — for demand uploads *and*
+        anticipatory prefetches alike (anticipatory migration)."""
         queues = self.policy.queues
+        if self.fabric is None:
+            def upload(fn_id, nbytes, now, kind):
+                q = queues.get(fn_id)
+                return dp.request(fn_id, nbytes, now, kind,
+                                  prio=q.ins if q is not None else 0)
+            return upload
 
         def upload(fn_id, nbytes, now, kind):
             q = queues.get(fn_id)
             return dp.request(fn_id, nbytes, now, kind,
-                              prio=q.ins if q is not None else 0)
+                              prio=q.ins if q is not None else 0,
+                              src=self._peer_source(dp, fn_id, now))
         return upload
+
+    def _peer_source(self, dp, fn_id: str, now: float) -> Optional[int]:
+        """Pick a migration source for fn's weights: a healthy peer
+        device with the region resident *and usable* (a mid-upload copy
+        cannot be read), least outstanding bytes on the directed
+        src->dst link breaking ties in device order. None -> host."""
+        fabric = self.fabric
+        dst = dp.dev_id
+        best = None
+        best_backlog = 0.0
+        for s in self.devices:
+            if s.dev_id == dst or s.failed:
+                continue
+            if not s.mem.is_resident(fn_id, now):
+                continue
+            backlog = fabric.backlog_bytes(s.dev_id, dst)
+            if best is None or backlog < best_backlog:
+                best, best_backlog = s.dev_id, backlog
+        return best
+
+    def _peer_evict_listener(self, src: int):
+        """Evict listener bound to one device's memory manager: when a
+        region leaves that HBM, every migration streaming *from* it
+        falls back to the destination's host link (restart from byte
+        zero, waiters preserved). Uses the destination datapath's
+        event-refreshed clock — evictions arrive without a timestamp."""
+        fabric = self.fabric
+
+        def on_evict(fn_id):
+            for dst_dp in fabric.on_source_evicted(src, fn_id):
+                dst_dp.peer_source_lost(fn_id, dst_dp.now)
+        return on_evict
 
     def prefetch_pass(self, now: float) -> None:
         """Anticipatory weight prefetch (the drain-side trigger): for

@@ -80,6 +80,9 @@ class SimExecutor:
         self._xfer_armed: Optional[float] = None   # earliest armed TRANSFER
         if self._pipeline:
             self._stage_fixed: Dict[str, float] = {}  # fn -> setup+compile
+            # chunked layer streaming: execution starts when the first
+            # chunk_bytes land; None waits for the full transfer (PR-6)
+            self._chunk_bytes = getattr(config, "chunk_bytes", None)
             # instance attr shadows the method: the fast loop binds
             # ``self._realize`` once, so scalar mode pays no branch
             self._realize = self._realize_pipeline
@@ -352,6 +355,18 @@ class SimExecutor:
                     inv, now, t_done if t_done > floor else floor,
                     service, dev)
 
+            cb = self._chunk_bytes
+            if cb is not None:
+                # chunked layer streaming: execution starts at the
+                # first-chunk milestone; the residual keeps streaming
+                # demand-class on the same link, overlapped with the run
+                if dp.await_first_chunk(inv.fn_id, cb, finish, now):
+                    return
+                # first chunk already on device: start at the floor
+                self._finish_realize(inv, now,
+                                     floor if floor > now else now,
+                                     service, dev)
+                return
             t.waiters.append(finish)
             return
         ready = d.ready
